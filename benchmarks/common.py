@@ -1,0 +1,60 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes ``run() -> list[Row]``; ``benchmarks.run``
+prints them as ``name,us_per_call,derived`` CSV.  Sizes are CPU-scale by
+default (this container is a 1-core CPU box); set ``BENCH_FULL=1`` for the
+larger configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+from typing import Iterable, List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def scale(small: int, full: int) -> int:
+    return full if FULL else small
+
+
+def ann_params(regime: str, dim: int, n_cap: int, metric: str = "l2"):
+    """Paper parameter sets, shrunk proportionally at CPU scale.
+
+    high-recall: R=64 l=128; low-recall: R=32 l=64.  CPU scale keeps the
+    2x ratio between regimes (R=24/l=48 vs R=12/l=24)."""
+    from repro.core import ANNConfig
+
+    if FULL:
+        r, l = (64, 128) if regime == "high" else (32, 64)
+    else:
+        r, l = (24, 48) if regime == "high" else (12, 24)
+    return ANNConfig(
+        dim=dim, n_cap=n_cap, r=r, l_build=l, l_search=l, l_delete=l,
+        k_delete=50 if FULL else 16, n_copies=3, alpha=1.2, metric=metric,
+        consolidation_threshold=0.2,
+    )
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt

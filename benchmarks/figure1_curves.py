@@ -1,0 +1,54 @@
+"""Figure 1: per-step recall / distance computations / QPS curves for
+IP-DiskANN vs FreshDiskANN.  Emits a CSV next to the run log and summary
+rows (curve stability: min/mean recall, mean comps, mean QPS)."""
+from __future__ import annotations
+
+import csv
+import os
+from typing import List
+
+import numpy as np
+
+from .common import REPO, Row, ann_params, scale
+
+
+def run() -> List[Row]:
+    from repro.core import StreamingIndex, make_runbook, run_runbook
+
+    rb = make_runbook(
+        "sliding_window", n=scale(1600, 10_000), dim=scale(48, 100),
+        t_max=scale(24, 200), seed=4,
+    )
+    out_dir = os.path.join(REPO, "experiments")
+    os.makedirs(out_dir, exist_ok=True)
+    rows: List[Row] = []
+    curves = {}
+    for mode in ("ip", "fresh"):
+        cfg = ann_params("high", rb.data.shape[1],
+                         int(rb.max_active * 1.6) + 64, rb.metric)
+        idx = StreamingIndex(cfg, mode=mode, max_external_id=len(rb.data) + 1)
+        rep = run_runbook(idx, rb, k=10, eval_every=2)
+        curves[mode] = rep.steps
+        steady = [m for m in rep.steps if m.step >= rb.eval_from]
+        rows.append(Row(
+            f"figure1.sliding_window.{mode}",
+            1e6 / max(np.mean([m.qps for m in steady]), 1e-9),
+            f"mean_recall={np.mean([m.recall for m in steady]):.3f};"
+            f"min_recall={np.min([m.recall for m in steady]):.3f};"
+            f"mean_comps={np.mean([m.comps_per_query for m in steady]):.0f}",
+        ))
+    path = os.path.join(out_dir, "figure1_curves.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["mode", "step", "n_active", "recall@10",
+                    "comps_per_query", "qps"])
+        for mode, steps in curves.items():
+            for m in steps:
+                w.writerow([mode, m.step, m.n_active, f"{m.recall:.4f}",
+                            f"{m.comps_per_query:.1f}", f"{m.qps:.1f}"])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

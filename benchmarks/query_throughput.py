@@ -1,0 +1,54 @@
+"""Query-path microbenchmarks: graph search vs brute force, batched QPS,
+and the per-hop gather-distance primitive (the Pallas kernel's workload)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .common import Row, ann_params, scale, timed
+
+
+def run() -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import StreamingIndex, brute_force_topk, make_dataset
+
+    n = scale(2000, 50_000)
+    dim = scale(48, 100)
+    data, queries = make_dataset(n, dim, n_queries=64, seed=6)
+    cfg = ann_params("high", dim, n + 64)
+    idx = StreamingIndex(cfg, max_external_id=n + 1)
+    idx.insert(np.arange(n), data)
+
+    rows: List[Row] = []
+    # graph search QPS (post-warmup)
+    idx.search(queries, k=10)
+    _, dt = timed(idx.search, queries, 10, repeat=3)
+    comps = idx.counters.search_comps / max(idx.counters.n_queries, 1)
+    rows.append(Row(
+        "query.graph_search", 1e6 * dt / len(queries),
+        f"qps={len(queries)/dt:.0f};comps_per_query={comps:.0f}",
+    ))
+    # brute force
+    qs = jnp.asarray(queries)
+    bf = jax.jit(lambda s, q: brute_force_topk(s, cfg, q, k=10),
+                 static_argnums=())
+    jax.block_until_ready(brute_force_topk(idx.state, cfg, qs, k=10))
+    _, dt_bf = timed(
+        lambda: jax.block_until_ready(
+            brute_force_topk(idx.state, cfg, qs, k=10)
+        ), repeat=3,
+    )
+    rows.append(Row(
+        "query.brute_force", 1e6 * dt_bf / len(queries),
+        f"qps={len(queries)/dt_bf:.0f};speedup_graph="
+        f"{dt_bf/dt:.2f}x",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,74 @@
+"""§Roofline report: renders the dry-run JSON records (all 40 cells x 2
+meshes) as the EXPERIMENTS.md roofline table.  No compilation happens here —
+``repro.launch.dryrun`` must have produced experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import List
+
+from .common import REPO, Row
+
+DRYRUN = Path(REPO) / "experiments" / "dryrun"
+
+
+def records(mesh: str = None):
+    out = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        out.append(rec)
+    return out
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| mem/dev GiB | useful-ratio | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records(mesh):
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | ERROR | — | — | — |"
+            )
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]["peak_bytes_per_device"] / 2**30
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant']} | {m:.2f} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for rec in records():
+        if rec.get("status") != "ok":
+            rows.append(Row(
+                f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+                0.0, "status=error",
+            ))
+            continue
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(Row(
+            f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+            bound * 1e6,
+            f"dominant={r['dominant']};frac={r['roofline_fraction']:.4f};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"mem_gib={rec['memory']['peak_bytes_per_device']/2**30:.2f}",
+        ))
+    if not rows:
+        rows.append(Row("roofline.missing", 0.0,
+                        "run python -m repro.launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,38 @@
+"""Table 2: the low-recall (resource-constrained) regime, R=32 l=64."""
+from __future__ import annotations
+
+from typing import List
+
+from .common import FULL, Row, scale
+from .table1_runbooks import RUNBOOKS, _run_mode
+
+
+def run() -> List[Row]:
+    from repro.core import make_runbook
+
+    n = scale(1400, 10_000)
+    t_max = scale(20, 200)
+    rows: List[Row] = []
+    for name, kind, kw in RUNBOOKS[:2]:  # paper's Table 2 covers 3 runbooks
+        extra = dict(kw)
+        if kind != "clustered":
+            extra["t_max"] = t_max
+        rb = make_runbook(kind, n=n, seed=2, **extra)
+        n_updates = sum(
+            len(s.insert_ids) + len(s.delete_ids) for s in rb.steps
+        )
+        for mode in ("ip", "fresh"):
+            rep, c = _run_mode(rb, mode, regime="low")
+            algo = "IP-DiskANN" if mode == "ip" else "FreshDiskANN"
+            rows.append(Row(
+                f"table2.{name}.{algo}",
+                1e6 * (c.insert_s + c.delete_s) / max(n_updates, 1),
+                f"recall@10={rep.avg_recall:.3f};insert_s={c.insert_s:.2f};"
+                f"delete_s={c.delete_s:.2f};search_s={c.search_s:.2f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,26 @@
+"""Table 4 / Figure 4: consolidation threshold t for the lightweight
+Algorithm 6 sweep (10% / 20% / 30%)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from .common import Row
+from .table3_ablations import _clustered_rb, _run
+
+
+def run() -> List[Row]:
+    rb = _clustered_rb()
+    rows: List[Row] = []
+    for t in (0.3, 0.2, 0.1):
+        rec, dels = _run(rb, consolidation_threshold=t)
+        rows.append(Row(
+            f"table4.t={int(t*100)}pct", dels * 1e6,
+            f"recall@10={rec:.3f};delete_s={dels:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,53 @@
+"""End-to-end runbook driver (the paper's §4 evaluation loop): replay a
+SlidingWindow update stream against IP-DiskANN and FreshDiskANN, printing
+per-step recall — the paper's headline is that the in-place curve is stable
+without batch consolidation.
+
+    PYTHONPATH=src python examples/streaming_runbook.py --runbook clustered
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.ann import test_scale
+from repro.core import StreamingIndex, make_runbook, run_runbook
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runbook", default="sliding_window",
+                    choices=["sliding_window", "expiration_time", "clustered"])
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    kw = dict(n=args.n, dim=args.dim, seed=0)
+    if args.runbook != "clustered":
+        kw["t_max"] = args.steps
+    else:
+        kw.update(n_clusters=8, rounds=2)
+    rb = make_runbook(args.runbook, **kw)
+
+    reports = {}
+    for mode in ("ip", "fresh"):
+        cfg = test_scale(args.dim, int(rb.max_active * 1.6) + 64)
+        idx = StreamingIndex(cfg, mode=mode, max_external_id=args.n + 1)
+        print(f"\n=== {args.runbook} / "
+              f"{'IP-DiskANN' if mode == 'ip' else 'FreshDiskANN'} ===")
+        reports[mode] = run_runbook(idx, rb, k=10, eval_every=2, verbose=True)
+
+    print("\nsummary:")
+    for mode, rep in reports.items():
+        print(" ", rep.summary())
+    d = reports["ip"].avg_recall - reports["fresh"].avg_recall
+    print(f"\nIP-DiskANN recall delta vs FreshDiskANN: {d:+.4f} "
+          f"(paper reports +0.0003 to +0.052 across runbooks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end LM training driver: a ~1M-param OLMo-family model for a few
+hundred steps on CPU with the full production loop — deterministic pipeline,
+AdamW, checkpointing, and a mid-run injected failure that the supervisor
+recovers from (bit-exact resume).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="olmo-1b")
+    args = ap.parse_args()
+    train_main([
+        "--arch", args.arch,
+        "--steps", str(args.steps),
+        "--supervise",
+        "--fail-at", str(max(1, args.steps // 3)),
+        "--ckpt-dir", "/tmp/repro_train_lm_ckpt",
+        "--ckpt-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    main()

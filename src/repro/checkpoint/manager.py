@@ -1,0 +1,141 @@
+"""Sharded checkpointing with atomic manifests and mesh-agnostic restore.
+
+Design (1000-node posture, documented in DESIGN.md §5):
+  * tensors are stored as per-leaf ``.npy`` chunks, addressed by the pytree
+    path — *unsharded logical values*, so a checkpoint written under one mesh
+    restores under any other (elastic rescale = device_put with the new
+    shardings);
+  * writes go to ``step_XXXX.tmp/`` then ``fsync`` + atomic ``rename`` to
+    ``step_XXXX/``, and the ``MANIFEST.json`` inside is written last — a
+    checkpoint either exists completely or not at all;
+  * ``latest()`` scans for the newest complete manifest, so a crash mid-write
+    falls back to the previous step (restart semantics exercised in
+    tests/test_ft.py).
+
+On a real multi-host fleet each host writes only its addressable shards and
+the manifest carries the global shape/sharding metadata; the single-process
+layout here keeps the same commit protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- write ----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> Path:
+        leaves, treedef = _flatten(tree)
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        index = {}
+        for i, (key, leaf) in enumerate(leaves.items()):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            index[key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        manifest = {
+            "step": step,
+            "leaves": index,
+            "treedef": jax.tree_util.tree_structure(tree).__repr__(),
+            "extra": extra or {},
+        }
+        # manifest last, fsync'd, then atomic directory rename
+        mpath = tmp / "MANIFEST.json"
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self._complete_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- read -----------------------------------------------------------------
+
+    def _complete_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp":
+                continue
+            if (p / "MANIFEST.json").exists():
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return out
+
+    def latest(self) -> Optional[int]:
+        steps = self._complete_steps()
+        return max(steps) if steps else None
+
+    def load(self, step: Optional[int] = None,
+             like: Any = None) -> Tuple[int, Any, dict]:
+        """Returns (step, tree-of-numpy, extra).  ``like`` supplies the pytree
+        structure; without it a flat {path: array} dict is returned."""
+        if step is None:
+            step = self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "MANIFEST.json").read_text())
+        flat = {
+            key: np.load(d / meta["file"])
+            for key, meta in manifest["leaves"].items()
+        }
+        if like is None:
+            return step, flat, manifest["extra"]
+        like_flat, treedef = _flatten(like)
+        assert set(like_flat) == set(flat), (
+            f"checkpoint/model mismatch: {set(like_flat) ^ set(flat)}"
+        )
+        leaves = [flat[k] for k in like_flat]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return step, tree, manifest["extra"]
+
+
+def restore_onto(tree_np: Any, shardings: Any = None):
+    """Materialise a numpy tree onto devices — with ``shardings`` (possibly a
+    *different* mesh than the one that wrote it: elastic rescale) or the
+    default device."""
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, tree_np)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree_np, shardings
+    )

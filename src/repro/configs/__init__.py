@@ -1,0 +1,17 @@
+from .base import ArchSpec, MeshAxes, ShapeSpec, axes_of, map_rules
+from .registry import all_archs, get_arch, register
+from . import ann  # the paper's own index configurations
+
+# importing an arch module registers its SPEC
+from . import (  # noqa: F401
+    din,
+    dlrm_mlperf,
+    dlrm_rm2,
+    gcn_cora,
+    olmo_1b,
+    qwen2_5_32b,
+    qwen2_72b,
+    qwen3_moe_235b_a22b,
+    qwen3_moe_30b_a3b,
+    two_tower_retrieval,
+)

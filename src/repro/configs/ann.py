@@ -1,0 +1,31 @@
+"""The paper's own index configurations (§4 Parameters)."""
+from __future__ import annotations
+
+from ..core.types import ANNConfig
+
+
+def high_recall(dim: int, n_cap: int, metric: str = "l2") -> ANNConfig:
+    """R=64, l_b = l_s = 128, alpha = 1.2 (paper's high-recall regime)."""
+    return ANNConfig(
+        dim=dim, n_cap=n_cap, r=64, l_build=128, l_search=128, l_delete=128,
+        k_delete=50, n_copies=3, alpha=1.2, metric=metric,
+        consolidation_threshold=0.2,
+    )
+
+
+def low_recall(dim: int, n_cap: int, metric: str = "l2") -> ANNConfig:
+    """R=32, l_b = l_s = 64 (paper's resource-constrained regime)."""
+    return ANNConfig(
+        dim=dim, n_cap=n_cap, r=32, l_build=64, l_search=64, l_delete=64,
+        k_delete=50, n_copies=3, alpha=1.2, metric=metric,
+        consolidation_threshold=0.2,
+    )
+
+
+def test_scale(dim: int, n_cap: int, metric: str = "l2") -> ANNConfig:
+    """Shrunk parameters for CPU-scale tests/benchmarks (same ratios)."""
+    return ANNConfig(
+        dim=dim, n_cap=n_cap, r=16, l_build=32, l_search=32, l_delete=32,
+        k_delete=16, n_copies=3, alpha=1.2, metric=metric,
+        consolidation_threshold=0.2,
+    )

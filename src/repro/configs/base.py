@@ -1,0 +1,142 @@
+"""Uniform architecture-spec interface consumed by launch/dryrun.py.
+
+Every arch exposes, per input shape ("cell"):
+  * ``abstract_state``  — ShapeDtypeStruct pytree of the persistent state
+                          (params / optimiser / KV cache), never allocated;
+  * ``abstract_inputs`` — ShapeDtypeStruct dict of the step inputs;
+  * ``make_step``       — step(state, inputs) -> (state', out) pure function;
+  * ``state_shardings`` / ``input_shardings`` — PartitionSpec pytrees;
+  * ``model_flops``     — useful-work FLOPs (6·N·D / 2·N·D conventions) for
+                          the roofline's MODEL_FLOPS / HLO_FLOPs ratio;
+  * ``reduced``         — a tiny same-family spec for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                      # train | prefill | decode | serve | ...
+    dims: Mapping[str, int]
+    skip: Optional[str] = None     # reason string when the cell is skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis names (and sizes) of the active mesh."""
+    dp: Tuple[str, ...]            # pure data-parallel axes (incl. "pod")
+    fsdp: Any                      # parameter-sharding data axis (or tuple)
+    model: str                     # tensor/expert-parallel axis
+    dp_size: int = 16              # product of dp axis sizes
+    model_size: int = 16
+
+    @property
+    def all(self) -> Tuple[str, ...]:
+        return self.dp + (self.model,)
+
+    @property
+    def all_size(self) -> int:
+        return self.dp_size * self.model_size
+
+
+def axes_of(mesh) -> MeshAxes:
+    names = mesh.axis_names
+    shape = dict(zip(names, mesh.devices.shape))
+    if "pod" in names:
+        # ZeRO across pods: parameters/optimizer shard over the full DP
+        # domain (pod x data), halving per-device model state at 2 pods
+        return MeshAxes(
+            dp=("pod", "data"), fsdp=("pod", "data"), model="model",
+            dp_size=shape["pod"] * shape["data"],
+            model_size=shape["model"],
+        )
+    return MeshAxes(
+        dp=("data",), fsdp="data", model="model",
+        dp_size=shape["data"], model_size=shape["model"],
+    )
+
+
+def pad_to(n: int, multiple: int) -> int:
+    """Mesh-aligned capacity: production allocators pad tables/graph arrays
+    to the shard grain so every device holds an equal slice."""
+    return -(-n // multiple) * multiple
+
+
+def map_rules(tree, rules: Dict[str, P]):
+    """Map a path->PartitionSpec rule table over a pytree.
+
+    Paths are '/'-joined dict keys / sequence indices; the longest rule key
+    that is a substring of the path wins; default replicated.
+    """
+
+    def lookup(path, leaf):
+        keys = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        best = None
+        for k, spec in rules.items():
+            if k in keys and (best is None or len(k) > len(best[0])):
+                best = (k, spec)
+        spec = best[1] if best else P()
+        assert len(spec) <= len(leaf.shape), (keys, spec, leaf.shape)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(lookup, tree)
+
+
+class ArchSpec(abc.ABC):
+    name: str
+    family: str
+
+    @abc.abstractmethod
+    def shapes(self) -> Dict[str, ShapeSpec]:
+        ...
+
+    @abc.abstractmethod
+    def abstract_state(self, shape: ShapeSpec):
+        ...
+
+    @abc.abstractmethod
+    def abstract_inputs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        ...
+
+    @abc.abstractmethod
+    def make_step(self, shape: ShapeSpec, axes: Optional[MeshAxes] = None) -> Callable:
+        ...
+
+    @abc.abstractmethod
+    def state_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        ...
+
+    @abc.abstractmethod
+    def input_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        ...
+
+    @abc.abstractmethod
+    def model_flops(self, shape: ShapeSpec) -> float:
+        ...
+
+    @abc.abstractmethod
+    def reduced(self) -> "ArchSpec":
+        ...
+
+    # -- shared helpers ------------------------------------------------------
+
+    def cells(self):
+        return [
+            (self.name, s.name) for s in self.shapes().values() if not s.skip
+        ]
+
+    def skipped_cells(self):
+        return [
+            (self.name, s.name, s.skip)
+            for s in self.shapes().values()
+            if s.skip
+        ]

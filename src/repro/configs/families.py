@@ -1,0 +1,988 @@
+"""Per-family ArchSpec implementations (LM / GNN / RecSys)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import gnn as gnn_mod
+from ..models import recsys as rec_mod
+from ..models import transformer as tf_mod
+from ..models.moe import MoEConfig
+from ..training.optimizer import AdamWConfig, adamw_init, adamw_update
+from .base import ArchSpec, MeshAxes, ShapeSpec, map_rules, pad_to
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _key():
+    return jax.random.PRNGKey(0)
+
+
+# ===========================================================================
+# LM family (dense GQA + MoE)
+# ===========================================================================
+
+LM_PARAM_RULES = {
+    "embed": P("model", "fsdp"),
+    "lm_head": P("fsdp", "model"),
+    "final_norm": P(None),
+    "layers/attn_norm": P(None, None),
+    "layers/mlp_norm": P(None, None),
+    "layers/w_gate": P(None, "fsdp", "model"),
+    "layers/w_up": P(None, "fsdp", "model"),
+    "layers/w_down": P(None, "model", "fsdp"),
+    "layers/moe/router": P(None, "fsdp", "model"),
+    "layers/moe/w_gate": P(None, "model", "fsdp", None),
+    "layers/moe/w_up": P(None, "model", "fsdp", None),
+    "layers/moe/w_down": P(None, "model", None, "fsdp"),
+}
+
+
+def lm_attn_rules(n_heads: int, n_kv_heads: int, tp: int):
+    """Attention param sharding chosen by divisibility (see
+    TransformerConfig.attn_shard):
+      kv-head axis when kv % tp == 0; else q-head axis with KV projections
+      sharded on head_dim (Megatron GQA: KV effectively replicated across
+      the tp groups that share a KV head); else head_dim everywhere."""
+    if n_kv_heads % tp == 0:
+        mode = "kv"
+        rules = {
+            "layers/wq": P(None, "fsdp", "model", None),
+            "layers/wk": P(None, "fsdp", "model", None),
+            "layers/wv": P(None, "fsdp", "model", None),
+            "layers/wo": P(None, "model", None, "fsdp"),
+            "layers/bq": P(None, "model", None),
+            "layers/bk": P(None, "model", None),
+            "layers/bv": P(None, "model", None),
+        }
+    elif n_heads % tp == 0:
+        mode = "q"
+        rules = {
+            "layers/wq": P(None, "fsdp", "model", None),
+            "layers/wk": P(None, "fsdp", None, "model"),
+            "layers/wv": P(None, "fsdp", None, "model"),
+            "layers/wo": P(None, "model", None, "fsdp"),
+            "layers/bq": P(None, "model", None),
+            "layers/bk": P(None, None, "model"),
+            "layers/bv": P(None, None, "model"),
+        }
+    else:
+        mode = "hd"
+        rules = {
+            "layers/wq": P(None, "fsdp", None, "model"),
+            "layers/wk": P(None, "fsdp", None, "model"),
+            "layers/wv": P(None, "fsdp", None, "model"),
+            "layers/wo": P(None, None, "model", "fsdp"),
+            "layers/bq": P(None, None, "model"),
+            "layers/bk": P(None, None, "model"),
+            "layers/bv": P(None, None, "model"),
+        }
+    return mode, rules
+
+
+def _resolve(rules: Dict[str, P], axes: MeshAxes) -> Dict[str, P]:
+    def fix(spec: P) -> P:
+        out = []
+        for s in spec:
+            if s == "fsdp":
+                out.append(axes.fsdp)
+            elif s == "dp":
+                out.append(axes.dp)
+            elif s == "all":
+                out.append(axes.all)
+            else:
+                out.append(s)
+        return P(*out)
+
+    return {k: fix(v) for k, v in rules.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class LMSpec(ArchSpec):
+    name: str
+    cfg: tf_mod.TransformerConfig
+    train_seq: int = 4096
+    train_batch: int = 256
+    prefill_seq: int = 32768
+    prefill_batch: int = 32
+    decode_seq: int = 32768
+    decode_batch: int = 128
+    long_seq: int = 524288
+    long_batch: int = 1
+    # microbatch gradient accumulation (memory lever for the big models;
+    # per-arch values chosen from the dry-run memory analysis)
+    accum_steps: int = 1
+    # Megatron sequence parallelism (see transformer.py) for train/prefill
+    seq_parallel: bool = False
+    # §Perf hillclimb knobs:
+    # fsdp axis placement for MoE expert weights: "d" (d_model, default) or
+    # "ff" (expert hidden dim — avoids sharding the einsum contraction)
+    moe_fsdp_dim: str = "d"
+    # serving params: fsdp-sharded (ZeRO-style, default) vs model-only (TP:
+    # weights resident, no per-token all-gather)
+    serve_param_fsdp: bool = True
+    # optimizer moment dtype ("bfloat16" for the largest models)
+    moment_dtype: str = "float32"
+    # None disables the global-norm clip pass (saves one fp32 traversal of
+    # every gradient leaf on the largest models)
+    grad_clip: Optional[float] = 1.0
+    # cast fp32 master weights to bf16 *before* the layer scan so the fsdp
+    # all-gathers move bf16, not fp32 (halves the dominant collective on the
+    # MoE trains — §Perf B1)
+    bf16_weight_gather: bool = False
+
+    def _opt_cfg(self):
+        return AdamWConfig(moment_dtype=self.moment_dtype,
+                           grad_clip=self.grad_clip)
+
+    def _eff_accum(self, axes) -> int:
+        """dp-adaptive microbatching: a 16-wide dp axis can split the global
+        batch twice as fine as the 32-wide multi-pod dp (divisibility)."""
+        if self.accum_steps == 1 or axes is None:
+            return self.accum_steps
+        return self.accum_steps * max(1, 32 // axes.dp_size)
+    # all five assigned LM archs are pure full attention -> long_500k skipped
+    long_skip: Optional[str] = (
+        "pure full-attention arch: long_500k requires sub-quadratic "
+        "attention (see DESIGN.md §Arch-applicability); bonus best-effort "
+        "decode dry-run reported separately in EXPERIMENTS.md"
+    )
+    family: str = "lm"
+
+    def shapes(self) -> Dict[str, ShapeSpec]:
+        return {
+            "train_4k": ShapeSpec(
+                "train_4k", "train",
+                {"seq": self.train_seq, "batch": self.train_batch},
+            ),
+            "prefill_32k": ShapeSpec(
+                "prefill_32k", "prefill",
+                {"seq": self.prefill_seq, "batch": self.prefill_batch},
+            ),
+            "decode_32k": ShapeSpec(
+                "decode_32k", "decode",
+                {"seq": self.decode_seq, "batch": self.decode_batch},
+            ),
+            "long_500k": ShapeSpec(
+                "long_500k", "decode",
+                {"seq": self.long_seq, "batch": self.long_batch},
+                skip=self.long_skip,
+            ),
+        }
+
+    # -- state / inputs -----------------------------------------------------
+
+    def abstract_params(self, dtype):
+        return _abstract(
+            lambda k: tf_mod.init_params(k, self.cfg, dtype), _key()
+        )
+
+    def abstract_state(self, shape: ShapeSpec):
+        if shape.kind == "train":
+            params = self.abstract_params(jnp.float32)
+            opt_cfg = self._opt_cfg()
+            return {
+                "params": params,
+                "opt": _abstract(lambda ps: adamw_init(ps, opt_cfg), params),
+            }
+        params = self.abstract_params(jnp.bfloat16)
+        if shape.kind == "decode":
+            cache = _abstract(
+                lambda: tf_mod.init_cache(
+                    self.cfg, shape.dims["batch"], shape.dims["seq"]
+                )
+            )
+            return {"params": params, "cache": cache}
+        return {"params": params}
+
+    def abstract_inputs(self, shape: ShapeSpec):
+        b, s = shape.dims["batch"], shape.dims["seq"]
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if shape.kind == "prefill":
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+    # -- step functions -------------------------------------------------------
+
+    def make_step(self, shape: ShapeSpec, axes: MeshAxes = None):
+        cfg = self.cfg
+        if axes is not None:
+            # activation-sharding anchors for GSPMD (see transformer.py)
+            mode, _ = lm_attn_rules(
+                cfg.n_heads, cfg.n_kv_heads, axes.model_size
+            )
+            cfg = dataclasses.replace(
+                cfg, dp_axes=tuple(axes.dp), tp_axis=axes.model,
+                attn_shard=mode,
+                seq_parallel=self.seq_parallel
+                and shape.kind in ("train", "prefill"),
+            )
+        if shape.kind == "train":
+            opt_cfg = self._opt_cfg()
+            accum = self._eff_accum(axes)
+
+            cast_bf16 = self.bf16_weight_gather
+
+            def train_step(state, inputs):
+                def loss_of(p, batch):
+                    if cast_bf16:
+                        p = jax.tree.map(
+                            lambda w: w.astype(jnp.bfloat16)
+                            if w.dtype == jnp.float32 else w,
+                            p,
+                        )
+                    return tf_mod.loss_fn(p, cfg, batch)
+
+                if accum == 1:
+                    loss, grads = jax.value_and_grad(loss_of)(
+                        state["params"], inputs
+                    )
+                else:
+                    split = jax.tree.map(
+                        lambda x: x.reshape(
+                            (accum, x.shape[0] // accum) + x.shape[1:]
+                        ),
+                        inputs,
+                    )
+
+                    def micro(carry, mb):
+                        g_acc, l_acc = carry
+                        l, g = jax.value_and_grad(loss_of)(
+                            state["params"], mb
+                        )
+                        g_acc = jax.tree.map(jnp.add, g_acc, g)
+                        return (g_acc, l_acc + l), None
+
+                    zeros = jax.tree.map(
+                        jnp.zeros_like, state["params"]
+                    )
+                    (grads, loss), _ = jax.lax.scan(
+                        micro, (zeros, jnp.float32(0.0)), split
+                    )
+                    grads = jax.tree.map(lambda g: g / accum, grads)
+                    loss = loss / accum
+                params, opt = adamw_update(
+                    grads, state["opt"], state["params"], opt_cfg
+                )
+                return {"params": params, "opt": opt}, {"loss": loss}
+
+            return train_step
+        if shape.kind == "prefill":
+
+            def prefill_step(state, inputs):
+                logits, cache = tf_mod.prefill(
+                    state["params"], cfg, inputs["tokens"]
+                )
+                return state, {"logits": logits, "cache": cache}
+
+            return prefill_step
+
+        def decode(state, inputs):
+            logits, cache = tf_mod.decode_step(
+                state["params"], cfg, state["cache"], inputs["tokens"]
+            )
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (
+                {"params": state["params"], "cache": cache},
+                {"next_token": next_tok},
+            )
+
+        return decode
+
+    # -- shardings ------------------------------------------------------------
+
+    def state_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        _, attn_rules = lm_attn_rules(
+            self.cfg.n_heads, self.cfg.n_kv_heads, axes.model_size
+        )
+        merged = {**LM_PARAM_RULES, **attn_rules}
+        if self.moe_fsdp_dim == "ff":
+            merged = {**merged,
+                      "layers/moe/w_gate": P(None, "model", None, "fsdp"),
+                      "layers/moe/w_up": P(None, "model", None, "fsdp"),
+                      "layers/moe/w_down": P(None, "model", "fsdp", None)}
+        if shape.kind != "train" and not self.serve_param_fsdp:
+            merged = {
+                k: P(*[None if a == "fsdp" else a for a in v])
+                for k, v in merged.items()
+            }
+        rules = _resolve(merged, axes)
+        params = map_rules(self.abstract_params(jnp.float32), rules)
+        if shape.kind == "train":
+            return {
+                "params": params,
+                "opt": {"m": params, "v": params, "step": P()},
+            }
+        if shape.kind == "decode":
+            b = shape.dims["batch"]
+            if b >= 16:
+                kv = P(None, axes.dp, axes.model, None, None)
+                ln = P(axes.dp)
+            else:
+                kv = P(None, None, axes.dp + (axes.model,), None, None)
+                ln = P(None)
+            return {
+                "params": params,
+                "cache": {"k": kv, "v": kv, "len": ln},
+            }
+        return {"params": params}
+
+    def input_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        if shape.kind in ("train", "prefill"):
+            tok = P(axes.dp, None)
+            if shape.kind == "train":
+                return {"tokens": tok, "labels": tok}
+            return {"tokens": tok}
+        b = shape.dims["batch"]
+        return {"tokens": P(axes.dp) if b >= 16 else P(None)}
+
+    def out_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        state = self.state_shardings(shape, axes)
+        if shape.kind == "train":
+            return (state, {"loss": P()})
+        if shape.kind == "prefill":
+            # cache rides (batch->dp, seq->model): kv_heads (4/8/16) need not
+            # divide the model axis, the 32k sequence always does
+            cache_kv = P(None, axes.dp, axes.model, None, None)
+            return (
+                state,
+                {
+                    "logits": P(axes.dp, axes.model),
+                    "cache": {"k": cache_kv, "v": cache_kv, "len": P(axes.dp)},
+                },
+            )
+        b = shape.dims["batch"]
+        return (state, {"next_token": P(axes.dp) if b >= 16 else P(None)})
+
+    # -- roofline ------------------------------------------------------------
+
+    def model_flops(self, shape: ShapeSpec) -> float:
+        n = self.cfg.n_active_params()
+        b, s = shape.dims["batch"], shape.dims["seq"]
+        if shape.kind == "train":
+            return 6.0 * n * b * s
+        if shape.kind == "prefill":
+            return 2.0 * n * b * s
+        # decode: one token per sequence + KV-cache attention reads
+        attn = (
+            4.0 * b * s * self.cfg.n_layers * self.cfg.n_heads * self.cfg.hd
+        )
+        return 2.0 * n * b + attn
+
+    def reduced(self) -> "LMSpec":
+        cfg = self.cfg
+        moe = (
+            MoEConfig(n_experts=8, top_k=2, d_ff_expert=64)
+            if cfg.moe
+            else None
+        )
+        small = tf_mod.TransformerConfig(
+            name=cfg.name + "-reduced", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+            qkv_bias=cfg.qkv_bias, norm=cfg.norm, moe=moe,
+            tie_embeddings=cfg.tie_embeddings, remat=False,
+        )
+        return dataclasses.replace(
+            self, name=self.name + "-reduced", cfg=small,
+            train_seq=32, train_batch=4, prefill_seq=64, prefill_batch=2,
+            decode_seq=64, decode_batch=4, long_seq=128, long_batch=1,
+            accum_steps=1, seq_parallel=False,
+        )
+
+
+# ===========================================================================
+# GNN family (GCN)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNSpec(ArchSpec):
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 16
+    family: str = "gnn"
+    scale: float = 1.0  # reduced() shrinks shapes
+
+    def _dims(self, v: int) -> int:
+        return max(4, int(v * self.scale))
+
+    def _padded(self, v: int) -> int:
+        """Mesh-aligned capacity for arrays sharded over the full mesh
+        (production graph allocators pad to the shard grain)."""
+        v = self._dims(v)
+        return pad_to(v, 512) if self.scale == 1.0 else v
+
+    def shapes(self) -> Dict[str, ShapeSpec]:
+        s = self._dims
+        return {
+            "full_graph_sm": ShapeSpec(
+                "full_graph_sm", "fullbatch",
+                {"n_nodes": self._padded(2708), "n_edges": self._padded(10556),
+                 "d_feat": s(1433), "n_classes": 7},
+            ),
+            "minibatch_lg": ShapeSpec(
+                "minibatch_lg", "minibatch",
+                {"n_nodes": self._padded(232965),
+                 "n_edges": self._padded(114615892) if self.scale == 1.0 else s(10000),
+                 "batch_nodes": s(1024), "fan1": 15 if self.scale == 1.0 else 3,
+                 "fan2": 10 if self.scale == 1.0 else 2, "d_feat": s(602),
+                 "n_classes": 41},
+            ),
+            "ogb_products": ShapeSpec(
+                "ogb_products", "fullbatch",
+                {"n_nodes": self._padded(2449029),
+                 "n_edges": self._padded(61859140),
+                 "d_feat": s(100), "n_classes": 47},
+            ),
+            "molecule": ShapeSpec(
+                "molecule", "graphbatch",
+                {"n_nodes": 30, "n_edges": 64, "batch": s(128),
+                 "d_feat": s(32), "n_classes": 16},
+            ),
+        }
+
+    def _cfg(self, shape: ShapeSpec) -> gnn_mod.GCNConfig:
+        return gnn_mod.GCNConfig(
+            name=self.name, n_layers=self.n_layers, d_hidden=self.d_hidden,
+            d_feat=shape.dims["d_feat"], n_classes=shape.dims["n_classes"],
+            graph_level=(shape.kind == "graphbatch"),
+        )
+
+    def abstract_state(self, shape: ShapeSpec):
+        cfg = self._cfg(shape)
+        params = _abstract(lambda k: gnn_mod.init_gcn_params(k, cfg), _key())
+        return {"params": params, "opt": _abstract(adamw_init, params)}
+
+    def abstract_inputs(self, shape: ShapeSpec):
+        d = shape.dims
+        f32, i32 = jnp.float32, jnp.int32
+        if shape.kind == "fullbatch":
+            return {
+                "feats": jax.ShapeDtypeStruct((d["n_nodes"], d["d_feat"]), f32),
+                "edges": jax.ShapeDtypeStruct((2, d["n_edges"]), i32),
+                "labels": jax.ShapeDtypeStruct((d["n_nodes"],), i32),
+            }
+        if shape.kind == "minibatch":
+            b, f1, f2 = d["batch_nodes"], d["fan1"], d["fan2"]
+            return {
+                "feats": jax.ShapeDtypeStruct((d["n_nodes"], d["d_feat"]), f32),
+                "seeds": jax.ShapeDtypeStruct((b,), i32),
+                "hop1": jax.ShapeDtypeStruct((b * f1,), i32),
+                "hop2": jax.ShapeDtypeStruct((b * f1 * f2,), i32),
+                "labels": jax.ShapeDtypeStruct((b,), i32),
+            }
+        nn = d["batch"] * d["n_nodes"]
+        ne = d["batch"] * d["n_edges"]
+        return {
+            "feats": jax.ShapeDtypeStruct((nn, d["d_feat"]), f32),
+            "edges": jax.ShapeDtypeStruct((2, ne), i32),
+            "graph_ids": jax.ShapeDtypeStruct((nn,), i32),
+            "labels": jax.ShapeDtypeStruct((d["batch"],), i32),
+        }
+
+    def make_step(self, shape: ShapeSpec, axes: MeshAxes = None):
+        cfg = self._cfg(shape)
+        opt_cfg = AdamWConfig()
+        n_graphs = shape.dims.get("batch", 0)
+
+        def train_step(state, inputs):
+            def loss_fn(p):
+                if shape.kind == "minibatch":
+                    return gnn_mod.sampled_gcn_loss(p, cfg, inputs)
+                batch = dict(inputs)
+                if shape.kind == "graphbatch":
+                    batch["n_graphs"] = n_graphs
+                return gnn_mod.gcn_loss(p, cfg, batch)
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            params, opt = adamw_update(
+                grads, state["opt"], state["params"], opt_cfg
+            )
+            return {"params": params, "opt": opt}, {"loss": loss}
+
+        return train_step
+
+    def state_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        params = jax.tree.map(
+            lambda _: P(), self.abstract_state(shape)["params"]
+        )
+        return {"params": params, "opt": {"m": params, "v": params, "step": P()}}
+
+    def input_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        if shape.kind == "fullbatch":
+            return {
+                "feats": P(axes.all, None),
+                "edges": P(None, axes.all),
+                "labels": P(axes.all),
+            }
+        if shape.kind == "minibatch":
+            return {
+                "feats": P(axes.all, None),
+                "seeds": P(axes.dp),
+                "hop1": P(axes.dp),
+                "hop2": P(axes.dp),
+                "labels": P(axes.dp),
+            }
+        return {
+            "feats": P(axes.dp, None),
+            "edges": P(None, axes.dp),
+            "graph_ids": P(axes.dp),
+            "labels": P(axes.dp),
+        }
+
+    def out_shardings(self, shape: ShapeSpec, axes: MeshAxes):
+        return (self.state_shardings(shape, axes), {"loss": P()})
+
+    def model_flops(self, shape: ShapeSpec) -> float:
+        cfg = self._cfg(shape)
+        d = shape.dims
+        if shape.kind == "minibatch":
+            b, f1, f2 = d["batch_nodes"], d["fan1"], d["fan2"]
+            fwd = 2.0 * (
+                b * f1 * f2 * cfg.d_feat * cfg.d_hidden
+                + b * f1 * cfg.d_hidden * cfg.n_classes
+            )
+            return 3.0 * fwd
+        n = d["n_nodes"] * d.get("batch", 1)
+        e = d["n_edges"] * d.get("batch", 1)
+        dims = cfg.layer_dims()
+        fwd = sum(2.0 * n * i * o for i, o in dims)  # transforms
+        fwd += sum(2.0 * e * o for _, o in dims)     # message adds
+        return 3.0 * fwd
+
+    def reduced(self) -> "GNNSpec":
+        return dataclasses.replace(
+            self, name=self.name + "-reduced", scale=0.01
+        )
+
+
+# ===========================================================================
+# RecSys family
+# ===========================================================================
+
+RECSYS_SHAPES = {
+    "train_batch": ("train", 65536),
+    "serve_p99": ("serve", 512),
+    "serve_bulk": ("serve", 262144),
+    "retrieval_cand": ("retrieval", 1),
+}
+
+
+def _recsys_shapes(scale: float, n_cand: int) -> Dict[str, ShapeSpec]:
+    out = {}
+    for name, (kind, b) in RECSYS_SHAPES.items():
+        dims = {"batch": max(4, int(b * scale))}
+        if kind == "retrieval":
+            dims["n_candidates"] = max(64, int(n_cand * scale))
+        out[name] = ShapeSpec(name, kind, dims)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMSpec(ArchSpec):
+    name: str
+    cfg: rec_mod.DLRMConfig
+    family: str = "recsys"
+    scale: float = 1.0
+
+    def shapes(self):
+        return _recsys_shapes(self.scale, 1_000_000)
+
+    def _padded_cfg(self):
+        """Embedding tables padded to mesh-aligned capacity (512 grain)."""
+        if self.scale != 1.0:
+            return self.cfg
+        return dataclasses.replace(
+            self.cfg,
+            vocab_sizes=tuple(pad_to(v, 512) if v >= 65536 else v
+                              for v in self.cfg.vocab_sizes),
+        )
+
+    def abstract_state(self, shape):
+        params = _abstract(
+            lambda k: rec_mod.init_dlrm_params(k, self._padded_cfg()), _key()
+        )
+        if shape.kind == "train":
+            return {"params": params, "opt": _abstract(adamw_init, params)}
+        return {"params": params}
+
+    def _batch(self, shape):
+        if shape.kind == "retrieval":
+            return shape.dims["n_candidates"]
+        return shape.dims["batch"]
+
+    def abstract_inputs(self, shape):
+        b = self._batch(shape)
+        out = {
+            "dense": jax.ShapeDtypeStruct((b, self.cfg.n_dense), jnp.float32),
+            "sparse": jax.ShapeDtypeStruct((b, self.cfg.n_sparse), jnp.int32),
+        }
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+        return out
+
+    def make_step(self, shape, axes: MeshAxes = None):
+        cfg = self.cfg
+        opt_cfg = AdamWConfig()
+        if shape.kind == "train":
+
+            def train_step(state, inputs):
+                def loss_fn(p):
+                    return rec_mod.dlrm_loss(p, cfg, inputs)
+
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+                params, opt = adamw_update(
+                    grads, state["opt"], state["params"], opt_cfg
+                )
+                return {"params": params, "opt": opt}, {"loss": loss}
+
+            return train_step
+
+        def serve_step(state, inputs):
+            logits = rec_mod.dlrm_forward(
+                state["params"], cfg, inputs["dense"], inputs["sparse"]
+            )
+            return state, {"scores": jax.nn.sigmoid(logits)}
+
+        return serve_step
+
+    def _table_specs(self, axes: MeshAxes):
+        return {
+            f"t{i}": P(axes.all, None) if v >= 65536 else P()
+            for i, v in enumerate(self.cfg.vocab_sizes)
+        }
+
+    def state_shardings(self, shape, axes):
+        mlp = lambda tree: jax.tree.map(lambda _: P(), tree)
+        params_abs = self.abstract_state(shape)["params"]
+        params = {
+            "tables": self._table_specs(axes),
+            "bot": mlp(params_abs["bot"]),
+            "top": mlp(params_abs["top"]),
+        }
+        if shape.kind == "train":
+            return {
+                "params": params,
+                "opt": {"m": params, "v": params, "step": P()},
+            }
+        return {"params": params}
+
+    def input_shardings(self, shape, axes):
+        sh = {"dense": P(axes.dp, None), "sparse": P(axes.dp, None)}
+        if shape.kind == "train":
+            sh["labels"] = P(axes.dp)
+        return sh
+
+    def out_shardings(self, shape, axes):
+        state = self.state_shardings(shape, axes)
+        if shape.kind == "train":
+            return (state, {"loss": P()})
+        return (state, {"scores": P(axes.dp)})
+
+    def model_flops(self, shape):
+        b = self._batch(shape)
+        cfg = self.cfg
+        bot = sum(2.0 * a * c for a, c in zip(cfg.bot_mlp, cfg.bot_mlp[1:]))
+        f = cfg.n_sparse + 1
+        top_in = cfg.embed_dim + f * (f - 1) // 2
+        dims = (top_in,) + cfg.top_mlp[1:]
+        top = sum(2.0 * a * c for a, c in zip(dims, dims[1:]))
+        inter = 2.0 * f * f * cfg.embed_dim
+        fwd = b * (bot + top + inter)
+        return 3.0 * fwd if shape.kind == "train" else fwd
+
+    def reduced(self):
+        small = dataclasses.replace(
+            self.cfg,
+            vocab_sizes=tuple(min(v, 1000) for v in self.cfg.vocab_sizes),
+            bot_mlp=(13, 32, self.cfg.embed_dim),
+            top_mlp=(32, 16, 1),
+        )
+        return dataclasses.replace(
+            self, name=self.name + "-reduced", cfg=small, scale=0.001
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DINSpec(ArchSpec):
+    name: str
+    cfg: rec_mod.DINConfig
+    family: str = "recsys"
+    scale: float = 1.0
+
+    def shapes(self):
+        return _recsys_shapes(self.scale, 1_000_000)
+
+    def _padded_cfg(self):
+        if self.scale != 1.0:
+            return self.cfg
+        return dataclasses.replace(
+            self.cfg, item_vocab=pad_to(self.cfg.item_vocab, 512)
+        )
+
+    def abstract_state(self, shape):
+        params = _abstract(
+            lambda k: rec_mod.init_din_params(k, self._padded_cfg()), _key()
+        )
+        if shape.kind == "train":
+            return {"params": params, "opt": _abstract(adamw_init, params)}
+        return {"params": params}
+
+    def abstract_inputs(self, shape):
+        s = self.cfg.seq_len
+        if shape.kind == "retrieval":
+            # one user's history scored against N candidate targets
+            n = shape.dims["n_candidates"]
+            return {
+                "hist": jax.ShapeDtypeStruct((1, s), jnp.int32),
+                "hist_len": jax.ShapeDtypeStruct((1,), jnp.int32),
+                "target": jax.ShapeDtypeStruct((n,), jnp.int32),
+            }
+        b = shape.dims["batch"]
+        out = {
+            "hist": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "hist_len": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "target": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+        return out
+
+    def make_step(self, shape, axes: MeshAxes = None):
+        cfg = self.cfg
+        opt_cfg = AdamWConfig()
+        if shape.kind == "train":
+
+            def train_step(state, inputs):
+                def loss_fn(p):
+                    return rec_mod.din_loss(p, cfg, inputs)
+
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+                params, opt = adamw_update(
+                    grads, state["opt"], state["params"], opt_cfg
+                )
+                return {"params": params, "opt": opt}, {"loss": loss}
+
+            return train_step
+        if shape.kind == "retrieval":
+
+            def retrieval_step(state, inputs):
+                n = inputs["target"].shape[0]
+                hist = jnp.broadcast_to(
+                    inputs["hist"], (n, cfg.seq_len)
+                )
+                hist_len = jnp.broadcast_to(inputs["hist_len"], (n,))
+                logits = rec_mod.din_forward(
+                    state["params"], cfg, hist, hist_len, inputs["target"]
+                )
+                return state, {"scores": jax.nn.sigmoid(logits)}
+
+            return retrieval_step
+
+        def serve_step(state, inputs):
+            logits = rec_mod.din_forward(
+                state["params"], cfg, inputs["hist"], inputs["hist_len"],
+                inputs["target"],
+            )
+            return state, {"scores": jax.nn.sigmoid(logits)}
+
+        return serve_step
+
+    def state_shardings(self, shape, axes):
+        abs_p = self.abstract_state(shape)["params"]
+        params = jax.tree.map(lambda _: P(), abs_p)
+        params["items"] = P(axes.all, None)
+        if shape.kind == "train":
+            return {
+                "params": params,
+                "opt": {"m": params, "v": params, "step": P()},
+            }
+        return {"params": params}
+
+    def input_shardings(self, shape, axes):
+        if shape.kind == "retrieval":
+            return {
+                "hist": P(None, None),
+                "hist_len": P(None),
+                "target": P(axes.dp),
+            }
+        sh = {
+            "hist": P(axes.dp, None),
+            "hist_len": P(axes.dp),
+            "target": P(axes.dp),
+        }
+        if shape.kind == "train":
+            sh["labels"] = P(axes.dp)
+        return sh
+
+    def out_shardings(self, shape, axes):
+        state = self.state_shardings(shape, axes)
+        if shape.kind == "train":
+            return (state, {"loss": P()})
+        return (state, {"scores": P(axes.dp)})
+
+    def model_flops(self, shape):
+        cfg = self.cfg
+        b = (
+            shape.dims["n_candidates"]
+            if shape.kind == "retrieval"
+            else shape.dims["batch"]
+        )
+        d = cfg.embed_dim
+        attn_dims = (4 * d,) + cfg.attn_mlp + (1,)
+        attn = sum(2.0 * a * c for a, c in zip(attn_dims, attn_dims[1:]))
+        mlp_dims = (3 * d,) + cfg.mlp + (1,)
+        mlp = sum(2.0 * a * c for a, c in zip(mlp_dims, mlp_dims[1:]))
+        fwd = b * (cfg.seq_len * attn + mlp + 2.0 * cfg.seq_len * d)
+        return 3.0 * fwd if shape.kind == "train" else fwd
+
+    def reduced(self):
+        small = dataclasses.replace(
+            self.cfg, item_vocab=1000, seq_len=8
+        )
+        return dataclasses.replace(
+            self, name=self.name + "-reduced", cfg=small, scale=0.001
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerSpec(ArchSpec):
+    name: str
+    cfg: rec_mod.TwoTowerConfig
+    family: str = "recsys"
+    scale: float = 1.0
+    # §Perf: two-phase top-k for retrieval_cand (local per-shard k, merge)
+    two_phase_topk: bool = False
+
+    def shapes(self):
+        return _recsys_shapes(self.scale, 1_000_000)
+
+    def _padded_cfg(self):
+        if self.scale != 1.0:
+            return self.cfg
+        return dataclasses.replace(
+            self.cfg,
+            user_vocab=pad_to(self.cfg.user_vocab, 512),
+            item_vocab=pad_to(self.cfg.item_vocab, 512),
+        )
+
+    def abstract_state(self, shape):
+        params = _abstract(
+            lambda k: rec_mod.init_two_tower_params(k, self._padded_cfg()),
+            _key(),
+        )
+        state = {"params": params}
+        if shape.kind == "train":
+            state["opt"] = _abstract(adamw_init, params)
+        if shape.kind == "retrieval":
+            n = shape.dims["n_candidates"]
+            if self.scale == 1.0:
+                n = pad_to(n, 512)
+            state["cand_embs"] = jax.ShapeDtypeStruct(
+                (n, self.cfg.tower_mlp[-1]), jnp.float32
+            )
+        return state
+
+    def abstract_inputs(self, shape):
+        if shape.kind == "retrieval":
+            return {"user_ids": jax.ShapeDtypeStruct((1,), jnp.int32)}
+        b = shape.dims["batch"]
+        return {
+            "user_ids": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "item_ids": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+
+    def make_step(self, shape, axes: MeshAxes = None):
+        cfg = self.cfg
+        opt_cfg = AdamWConfig()
+        if shape.kind == "train":
+
+            def train_step(state, inputs):
+                def loss_fn(p):
+                    return rec_mod.two_tower_loss(p, cfg, inputs)
+
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+                params, opt = adamw_update(
+                    grads, state["opt"], state["params"], opt_cfg
+                )
+                return {"params": params, "opt": opt}, {"loss": loss}
+
+            return train_step
+        if shape.kind == "retrieval":
+            two_phase = self.two_phase_topk
+            n_blocks = axes.all_size if axes is not None else 1
+
+            def retrieval_step(state, inputs):
+                top, idx = rec_mod.two_tower_score_candidates(
+                    state["params"], cfg, inputs["user_ids"],
+                    state["cand_embs"], k=100,
+                    n_blocks=n_blocks if two_phase else 1,
+                )
+                return state, {"scores": top, "ids": idx}
+
+            return retrieval_step
+
+        def serve_step(state, inputs):
+            u, i = rec_mod.two_tower_embed(
+                state["params"], cfg, inputs["user_ids"], inputs["item_ids"]
+            )
+            return state, {"scores": jnp.sum(u * i, axis=-1)}
+
+        return serve_step
+
+    def state_shardings(self, shape, axes):
+        abs_p = self.abstract_state(shape)["params"]
+        params = jax.tree.map(lambda _: P(), abs_p)
+        params["user_emb"] = P(axes.all, None)
+        params["item_emb"] = P(axes.all, None)
+        state = {"params": params}
+        if shape.kind == "train":
+            state["opt"] = {"m": params, "v": params, "step": P()}
+        if shape.kind == "retrieval":
+            state["cand_embs"] = P(axes.all, None)
+        return state
+
+    def input_shardings(self, shape, axes):
+        if shape.kind == "retrieval":
+            return {"user_ids": P(None)}
+        return {"user_ids": P(axes.dp), "item_ids": P(axes.dp)}
+
+    def out_shardings(self, shape, axes):
+        state = self.state_shardings(shape, axes)
+        if shape.kind == "train":
+            return (state, {"loss": P()})
+        if shape.kind == "retrieval":
+            return (state, {"scores": P(None, None), "ids": P(None, None)})
+        return (state, {"scores": P(axes.dp)})
+
+    def model_flops(self, shape):
+        cfg = self.cfg
+        dims = (cfg.embed_dim,) + cfg.tower_mlp
+        tower = sum(2.0 * a * c for a, c in zip(dims, dims[1:]))
+        if shape.kind == "retrieval":
+            n = shape.dims["n_candidates"]
+            return tower + 2.0 * n * cfg.tower_mlp[-1]
+        b = shape.dims["batch"]
+        fwd = 2.0 * b * tower
+        if shape.kind == "train":
+            fwd += 2.0 * b * b * cfg.tower_mlp[-1]  # in-batch logits
+            return 3.0 * fwd
+        return fwd
+
+    def reduced(self):
+        small = dataclasses.replace(
+            self.cfg, user_vocab=1000, item_vocab=1000,
+            tower_mlp=(64, 32, 16),
+        )
+        return dataclasses.replace(
+            self, name=self.name + "-reduced", cfg=small, scale=0.001
+        )

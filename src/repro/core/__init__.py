@@ -1,0 +1,41 @@
+# The paper's primary contribution: IP-DiskANN — in-place updates of a
+# DiskANN proximity-graph index for streaming ANNS, as a JAX tensor program.
+from .consolidate import fresh_consolidate, light_consolidate
+from .delete import ip_delete, ip_delete_many, lazy_delete, lazy_delete_many
+from .driver import RunbookReport, StepMetrics, run_runbook
+from .index import StreamingIndex
+from .insert import insert, insert_many
+from .prune import robust_prune
+from .recall import brute_force_topk, recall_at_k
+from .runbook import Runbook, RunbookStep, make_dataset, make_runbook
+from .search import SearchResult, greedy_search, search_batch
+from .types import INVALID, ANNConfig, GraphState, init_state
+
+__all__ = [
+    "ANNConfig",
+    "GraphState",
+    "INVALID",
+    "Runbook",
+    "RunbookReport",
+    "RunbookStep",
+    "SearchResult",
+    "StepMetrics",
+    "StreamingIndex",
+    "brute_force_topk",
+    "fresh_consolidate",
+    "greedy_search",
+    "init_state",
+    "insert",
+    "insert_many",
+    "ip_delete",
+    "ip_delete_many",
+    "lazy_delete",
+    "lazy_delete_many",
+    "light_consolidate",
+    "make_dataset",
+    "make_runbook",
+    "recall_at_k",
+    "robust_prune",
+    "run_runbook",
+    "search_batch",
+]

@@ -1,0 +1,156 @@
+"""Beyond-paper optimization: batched update processing.
+
+The paper's implementation overlaps updates across 16 CPU threads; in-flight
+updates don't observe each other's graph writes.  The TPU-native equivalent
+splits each update into a *search phase* and a *write phase*:
+
+  phase 1 — all B updates' greedy searches run data-parallel (vmap) against
+            the pre-batch graph (exactly the paper's relaxed visibility);
+  phase 2 — graph writes (prune + edge insertion) apply serially via scan,
+            reusing the precomputed candidate lists.
+
+The searches dominate update cost (the paper's Table 3 shows deletion time
+is search-bound), so batching them converts the serial update stream into
+one wide SPMD program.  Recall impact is bounded by the batch size (same
+argument as the paper's multi-threaded execution) and measured in
+benchmarks/perf_ann.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .delete import DeleteStats, _next_start, _topc_candidates
+from .edges import append_one, remove_target_rows
+from .insert import InsertStats
+from .prune import robust_prune
+from .search import greedy_search
+from .types import INVALID, ANNConfig, GraphState, clip_ids
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def insert_many_batched(state: GraphState, cfg: ANNConfig, xs: jax.Array):
+    """Batched inserts: vmapped searches, serial writes.  xs: (B, dim)."""
+    b = xs.shape[0]
+
+    # phase 0: allocate slots and write vectors (so searches can't find them:
+    # slots stay inactive until phase 2 links them)
+    base = state.free_top - b
+    idxs = base + jnp.arange(b)
+    ok = idxs >= 0
+    slots = jnp.where(ok, state.free_stack[jnp.maximum(idxs, 0)], INVALID)
+    sslots = clip_ids(slots, cfg.n_cap)
+    xs_f = xs.astype(state.vectors.dtype)
+    state = state._replace(
+        vectors=state.vectors.at[sslots].set(
+            jnp.where(ok[:, None], xs_f, state.vectors[sslots])
+        ),
+        norms=state.norms.at[sslots].set(
+            jnp.where(ok, jnp.sum(xs_f * xs_f, axis=1), state.norms[sslots])
+        ),
+    )
+
+    # phase 1: batched searches against the pre-batch graph
+    def search_one(x):
+        res = greedy_search(state, cfg, x, k=1, l=cfg.l_build)
+        return res.visited_ids, res.visited_dists, res.n_comps
+
+    vis_ids, vis_dists, comps = jax.vmap(search_one)(xs_f)
+
+    # phase 2: serial link application
+    def link(st: GraphState, args):
+        slot, x, vids, vdists, ok = args
+
+        def do(st: GraphState):
+            nout = robust_prune(st, cfg, x, vids, vdists, p_id=slot)
+            st = st._replace(
+                adj=st.adj.at[clip_ids(slot, cfg.n_cap)].set(nout),
+                active=st.active.at[clip_ids(slot, cfg.n_cap)].set(True),
+                n_active=st.n_active + 1,
+                free_top=st.free_top - 1,
+                start=jnp.where(st.start < 0, slot, st.start),
+            )
+
+            def rev(i, s):
+                return append_one(s, cfg, nout[i], slot)
+
+            return lax.fori_loop(0, cfg.r, rev, st)
+
+        return lax.cond(ok, do, lambda s: s, st), slot
+
+    state, out_slots = lax.scan(
+        link, state, (slots, xs_f, vis_ids, vis_dists, ok)
+    )
+    stats = InsertStats(
+        slot=jnp.where(ok, out_slots, INVALID),
+        n_comps=comps,
+        n_hops=jnp.zeros_like(comps),
+    )
+    return state, stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ip_delete_many_batched(state: GraphState, cfg: ANNConfig, ps: jax.Array):
+    """Batched in-place deletes: vmapped searches, serial edge repair."""
+    b = ps.shape[0]
+    sps = clip_ids(ps, cfg.n_cap)
+    valid = (ps >= 0) & state.active[sps]
+
+    def search_one(p):
+        x_p = state.vectors[clip_ids(p, cfg.n_cap)]
+        res = greedy_search(state, cfg, x_p, k=cfg.k_delete, l=cfg.l_delete)
+        vis = jnp.where(res.visited_ids == p, INVALID, res.visited_ids)
+        cands = jnp.where(res.topk_ids == p, INVALID, res.topk_ids)
+        return vis, cands, res.n_comps
+
+    vis_b, cands_b, comps_b = jax.vmap(search_one)(ps)
+
+    def repair(st: GraphState, args):
+        p, vis, cands, ok = args
+        sp = clip_ids(p, cfg.n_cap)
+
+        def do(st: GraphState):
+            nout_p = st.adj[sp]
+            vis_rows = st.adj[clip_ids(vis, cfg.n_cap)]
+            in_mask = jnp.any(vis_rows == p, axis=1) & (vis >= 0)
+            cz = _topc_candidates(st, cfg, vis, cands, cfg.n_copies)
+            st = st._replace(adj=remove_target_rows(
+                st, cfg, jnp.where(in_mask, vis, INVALID), p))
+
+            def z_body(i, s):
+                def add(sz):
+                    def inner(j, s2):
+                        return append_one(s2, cfg, vis[i], cz[i, j])
+                    return lax.fori_loop(0, cfg.n_copies, inner, sz)
+                return lax.cond(in_mask[i], add, lambda sz: sz, s)
+
+            st = lax.fori_loop(0, vis.shape[0], z_body, st)
+            cw = _topc_candidates(st, cfg, nout_p, cands, cfg.n_copies)
+
+            def w_body(i, s):
+                def inner(j, s2):
+                    return append_one(s2, cfg, cw[i, j], nout_p[i])
+                return lax.fori_loop(0, cfg.n_copies, inner, s)
+
+            st = lax.fori_loop(0, cfg.r, w_body, st)
+            new_start = _next_start(st, cfg, p, nout_p)
+            return st._replace(
+                adj=st.adj.at[sp].set(
+                    jnp.full((cfg.r,), INVALID, jnp.int32)),
+                active=st.active.at[sp].set(False),
+                quarantine=st.quarantine.at[sp].set(True),
+                n_active=st.n_active - 1,
+                n_pending=st.n_pending + 1,
+                start=new_start,
+            )
+
+        return lax.cond(ok, do, lambda s: s, st), None
+
+    state, _ = lax.scan(repair, state, (ps, vis_b, cands_b, valid))
+    stats = DeleteStats(ok=valid, n_comps=comps_b,
+                        n_in=jnp.zeros_like(comps_b))
+    return state, stats

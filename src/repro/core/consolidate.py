@@ -1,0 +1,153 @@
+"""Consolidation passes.
+
+``light_consolidate`` — Algorithm 6 (ours): strip dangling edges to
+quarantined slots and release those slots to the free stack.  **No distance
+computations** — one gather + compare + compact over the adjacency matrix,
+exactly the paper's "extremely lightweight" sweep.
+
+``fresh_consolidate`` — Algorithm 4 (FreshDiskANN baseline): for every live
+vertex with tombstoned out-neighbours, splice in the tombstones'
+out-neighbourhoods and RobustPrune.  Host-orchestrated (it is the *offline
+background* pass in the paper): affected rows are selected on host, then
+pruned in vmapped device chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prune import robust_prune
+from .types import (
+    INVALID,
+    ANNConfig,
+    GraphState,
+    clip_ids,
+    compact_row,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def light_consolidate(state: GraphState, cfg: ANNConfig) -> GraphState:
+    """Algorithm 6: remove dangling edges, free quarantined slots."""
+    adj = state.adj
+    dead = state.quarantine[clip_ids(adj, cfg.n_cap)] & (adj >= 0)
+    adj = jnp.where(dead, INVALID, adj)
+    adj = jax.vmap(compact_row)(adj)
+
+    # release quarantined slots onto the free stack
+    n = cfg.n_cap
+    q_idx = jnp.where(state.quarantine, jnp.arange(n, dtype=jnp.int32), n)
+    q_sorted = jnp.sort(q_idx)                      # quarantined ids first
+    n_q = jnp.sum(state.quarantine).astype(jnp.int32)
+    pos = state.free_top + jnp.arange(n, dtype=jnp.int32)
+    pos = jnp.where(jnp.arange(n) < n_q, pos, n)    # only first n_q written
+    free_stack = state.free_stack.at[pos].set(
+        q_sorted.astype(jnp.int32), mode="drop"
+    )
+    return state._replace(
+        adj=adj,
+        quarantine=jnp.zeros_like(state.quarantine),
+        free_stack=free_stack,
+        free_top=state.free_top + n_q,
+        n_pending=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# FreshDiskANN batch consolidation (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+
+def _splice_candidates(state: GraphState, cfg: ANNConfig, node):
+    """Candidate set for one affected node: (own row \\ D) U (rows of deleted
+    out-neighbours \\ D).  Fixed width r + r*r."""
+    row = state.adj[node]                                       # (r,)
+    srow = clip_ids(row, cfg.n_cap)
+    nbr_dead = state.tombstone[srow] & (row >= 0)
+    # rows of deleted out-neighbours
+    two_hop = state.adj[srow]                                   # (r, r)
+    two_hop = jnp.where(nbr_dead[:, None], two_hop, INVALID)
+    keep_own = jnp.where((row >= 0) & ~nbr_dead, row, INVALID)
+    cand = jnp.concatenate([keep_own, two_hop.reshape(-1)])
+    scand = clip_ids(cand, cfg.n_cap)
+    cand = jnp.where(
+        (cand >= 0) & ~state.tombstone[scand] & (cand != node), cand, INVALID
+    )
+    return cand, jnp.any(nbr_dead)
+
+
+def _consolidate_rows(state: GraphState, cfg: ANNConfig, nodes):
+    """New rows for a chunk of affected nodes (vmapped Alg 4 lines 4-7)."""
+
+    def one(node):
+        cand, _ = _splice_candidates(state, cfg, node)
+        # Alg 4 prunes the spliced candidate set back to <= r.
+        return robust_prune(
+            state, cfg, state.vectors[node], cand, p_id=node
+        )
+
+    return jax.vmap(one)(nodes)
+
+
+_consolidate_rows_j = jax.jit(_consolidate_rows, static_argnames=("cfg",))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _affected_mask(state: GraphState, cfg: ANNConfig):
+    dead = state.tombstone[clip_ids(state.adj, cfg.n_cap)] & (state.adj >= 0)
+    return jnp.any(dead, axis=1) & state.active
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _release_tombstones(state: GraphState, cfg: ANNConfig) -> GraphState:
+    """Clear tombstoned slots and return them to the free stack."""
+    n = cfg.n_cap
+    t = state.tombstone
+    t_idx = jnp.where(t, jnp.arange(n, dtype=jnp.int32), n)
+    t_sorted = jnp.sort(t_idx)
+    n_t = jnp.sum(t).astype(jnp.int32)
+    pos = state.free_top + jnp.arange(n, dtype=jnp.int32)
+    pos = jnp.where(jnp.arange(n) < n_t, pos, n)
+    free_stack = state.free_stack.at[pos].set(t_sorted, mode="drop")
+    adj = jnp.where(t[:, None], INVALID, state.adj)
+    # entry point must stay live
+    nav = state.active
+    start_dead = (state.start >= 0) & t[clip_ids(state.start, n)]
+    new_start = jnp.where(
+        start_dead,
+        jnp.where(jnp.any(nav), jnp.argmax(nav).astype(jnp.int32), INVALID),
+        state.start,
+    )
+    return state._replace(
+        adj=adj,
+        tombstone=jnp.zeros_like(t),
+        free_stack=free_stack,
+        free_top=state.free_top + n_t,
+        n_pending=jnp.int32(0),
+        start=new_start,
+    )
+
+
+def fresh_consolidate(
+    state: GraphState, cfg: ANNConfig, chunk: int = 256
+) -> GraphState:
+    """Algorithm 4 (baseline).  Host-orchestrated offline pass."""
+    mask = np.asarray(_affected_mask(state, cfg))
+    affected = np.nonzero(mask)[0].astype(np.int32)
+    # fixed-size device chunks (pad the tail so one compilation serves all)
+    if affected.size:
+        pad = (-affected.size) % chunk
+        padded = np.concatenate(
+            [affected, np.full((pad,), affected[0], np.int32)]
+        )
+        adj = state.adj
+        for i in range(0, padded.size, chunk):
+            nodes = jnp.asarray(padded[i : i + chunk])
+            rows = _consolidate_rows_j(state, cfg, nodes)
+            take = min(chunk, affected.size - i)
+            adj = adj.at[nodes[:take]].set(rows[:take])
+        state = state._replace(adj=adj)
+    return _release_tombstones(state, cfg)

@@ -1,0 +1,188 @@
+"""In-place deletion (Algorithm 5) — the paper's core contribution — plus the
+lazy tombstone delete used by the FreshDiskANN baseline.
+
+Algorithm 5, TPU form:
+  1. GreedySearch(x_p, k, l_d) -> Visited (expansion list), Candidates (top-k).
+  2. Approximate in-neighbours: N'_in = {z in Visited : p in N_out(z)} — one
+     (V, r) gather + compare, no in-neighbour lists maintained.
+  3. For each z in N'_in: remove edge z->p, add edges z -> closest-c
+     candidates to x_z.  The closest-c selection for *all* visited rows is one
+     (V, k) distance matrix + top-c (vectorised before the serial append loop).
+  4. For each w in N_out(p): add edges y -> w for the closest-c candidates y
+     to x_w ((r, k) matrix + top-c).
+  5. Remove p immediately: slot goes to *quarantine* (not the free stack) so
+     dangling in-edges cannot alias a reused slot; Algorithm 6 releases it.
+
+Degree overflow is resolved per-append via RobustPrune (as in Algorithm 2),
+which matches the reference implementation's behaviour for fixed-degree rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .distance import BIG, pair_dists
+from .edges import append_one, remove_target_rows
+from .search import greedy_search
+from .types import INVALID, ANNConfig, GraphState, clip_ids
+
+
+class DeleteStats(NamedTuple):
+    ok: jax.Array       # bool[] point existed and was removed
+    n_comps: jax.Array  # i32[]
+    n_in: jax.Array     # i32[] approximated in-neighbours found
+
+
+def _topc_candidates(state, cfg, src_ids, cand_ids, c):
+    """For each source row, the c closest candidate ids (excluding itself)."""
+    ssrc = clip_ids(src_ids, cfg.n_cap)
+    scand = clip_ids(cand_ids, cfg.n_cap)
+    d = pair_dists(
+        cfg.metric,
+        state.vectors[ssrc],
+        state.norms[ssrc],
+        state.vectors[scand],
+        state.norms[scand],
+    )  # (S, K)
+    d = jnp.where((cand_ids[None, :] < 0), BIG, d)
+    d = jnp.where(cand_ids[None, :] == src_ids[:, None], BIG, d)
+    _, idx = lax.top_k(-d, c)                      # (S, c)
+    chosen = cand_ids[idx]
+    finite = jnp.take_along_axis(d, idx, axis=1) < BIG
+    return jnp.where(finite, chosen, INVALID)      # (S, c)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ip_delete(state: GraphState, cfg: ANNConfig, p: jax.Array):
+    """Delete slot ``p`` in place (Algorithm 5)."""
+    sp = clip_ids(p, cfg.n_cap)
+    valid = (p >= 0) & state.active[sp]
+
+    def no_op(st: GraphState):
+        return st, DeleteStats(jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+
+    def do_delete(st: GraphState):
+        x_p = st.vectors[sp]
+        res = greedy_search(st, cfg, x_p, k=cfg.k_delete, l=cfg.l_delete)
+        vis = jnp.where(res.visited_ids == p, INVALID, res.visited_ids)
+        cands = jnp.where(res.topk_ids == p, INVALID, res.topk_ids)
+        nout_p = st.adj[sp]
+
+        # --- approximate in-neighbours & their replacement edges -----------
+        vis_rows = st.adj[clip_ids(vis, cfg.n_cap)]          # (V, r)
+        in_mask = jnp.any(vis_rows == p, axis=1) & (vis >= 0)
+        n_in = jnp.sum(in_mask).astype(jnp.int32)
+        cz = _topc_candidates(st, cfg, vis, cands, cfg.n_copies)   # (V, c)
+
+        # remove z -> p for every approximated in-neighbour
+        st = st._replace(
+            adj=remove_target_rows(
+                st, cfg, jnp.where(in_mask, vis, INVALID), p
+            )
+        )
+
+        def z_body(i, s):
+            do = in_mask[i]
+
+            def add(sz):
+                def inner(j, s2):
+                    return append_one(s2, cfg, vis[i], cz[i, j])
+                return lax.fori_loop(0, cfg.n_copies, inner, sz)
+
+            return lax.cond(do, add, lambda sz: sz, s)
+
+        st = lax.fori_loop(0, vis.shape[0], z_body, st)
+
+        # --- replacement edges into p's out-neighbourhood ------------------
+        cw = _topc_candidates(st, cfg, nout_p, cands, cfg.n_copies)  # (r, c)
+
+        def w_body(i, s):
+            w = nout_p[i]
+
+            def inner(j, s2):
+                return append_one(s2, cfg, cw[i, j], w)
+
+            return lax.fori_loop(0, cfg.n_copies, inner, s)
+
+        st = lax.fori_loop(0, cfg.r, w_body, st)
+
+        # --- remove p (quarantine the slot until Algorithm 6) --------------
+        new_start = _next_start(st, cfg, p, nout_p)
+        st = st._replace(
+            adj=st.adj.at[sp].set(jnp.full((cfg.r,), INVALID, jnp.int32)),
+            active=st.active.at[sp].set(False),
+            quarantine=st.quarantine.at[sp].set(True),
+            n_active=st.n_active - 1,
+            n_pending=st.n_pending + 1,
+            start=new_start,
+        )
+        # distance comps: search + (V + r) * k selection matrices
+        extra = (res.n_visited + jnp.sum(nout_p >= 0)) * cfg.k_delete
+        return st, DeleteStats(
+            jnp.bool_(True), res.n_comps + extra.astype(jnp.int32), n_in
+        )
+
+    return lax.cond(valid, do_delete, no_op, state)
+
+
+def _next_start(st: GraphState, cfg: ANNConfig, p, nout_p):
+    """Reassign the entry point if it is being deleted."""
+    nav = (st.active | st.tombstone).at[clip_ids(p, cfg.n_cap)].set(False)
+    nbr_ok = (nout_p >= 0) & nav[clip_ids(nout_p, cfg.n_cap)]
+    first_nbr = nout_p[jnp.argmax(nbr_ok)]
+    any_nbr = jnp.any(nbr_ok)
+    fallback = jnp.argmax(nav).astype(jnp.int32)
+    has_any = jnp.any(nav)
+    replacement = jnp.where(
+        any_nbr, first_nbr, jnp.where(has_any, fallback, INVALID)
+    )
+    return jnp.where(st.start == p, replacement, st.start)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ip_delete_many(state: GraphState, cfg: ANNConfig, ps: jax.Array):
+    def step(st, p):
+        st, stats = ip_delete(st, cfg, p)
+        return st, stats
+
+    return lax.scan(step, state, ps)
+
+
+# ---------------------------------------------------------------------------
+# FreshDiskANN lazy delete (baseline)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def lazy_delete(state: GraphState, cfg: ANNConfig, p: jax.Array):
+    """Tombstone ``p``: still navigable, no longer returnable (FreshDiskANN)."""
+    sp = clip_ids(p, cfg.n_cap)
+    valid = (p >= 0) & state.active[sp]
+
+    def do(st: GraphState):
+        # keep the entry point navigable; tombstones remain navigable so no
+        # start reassignment is needed here (Alg 4 handles it on consolidate).
+        return st._replace(
+            active=st.active.at[sp].set(False),
+            tombstone=st.tombstone.at[sp].set(True),
+            n_active=st.n_active - 1,
+            n_pending=st.n_pending + 1,
+        ), DeleteStats(jnp.bool_(True), jnp.int32(0), jnp.int32(0))
+
+    def no_op(st: GraphState):
+        return st, DeleteStats(jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+
+    return lax.cond(valid, do, no_op, state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def lazy_delete_many(state: GraphState, cfg: ANNConfig, ps: jax.Array):
+    def step(st, p):
+        st, stats = lazy_delete(st, cfg, p)
+        return st, stats
+
+    return lax.scan(step, state, ps)

@@ -1,0 +1,169 @@
+"""Sharded streaming index: the paper's single-node system scaled out.
+
+Each device along the flattened mesh owns an independent sub-index
+(GraphState stacked on a leading shard axis).  The classic distributed-ANNS
+pattern maps onto shard_map:
+
+  * search: the query fans out to every shard (replicated), each shard runs
+    its local greedy beam and returns its local top-k; a global top-k merge
+    over the all-gathered (k x S) candidates yields the answer.  One
+    all-gather of k ids+dists per query — tiny versus the beam compute.
+  * insert/delete: updates are routed to their owning shard by slot hash;
+    each shard scans only the updates addressed to it (others no-op).
+    Per-shard serial semantics are preserved — this is exactly the paper's
+    concurrency model (independent streams per shard, no cross-shard edges).
+
+Straggler mitigation for serving: ``search(..., backup=True)`` queries all
+shards anyway (fan-out IS the redundancy); at 1000-node scale the merge
+tolerates missing shards by masking their results (see ft/supervisor).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .delete import ip_delete
+from .insert import insert
+from .search import greedy_search
+from .types import INVALID, ANNConfig, GraphState, init_state
+
+
+class ShardedIndex:
+    """S sub-indexes run in SPMD over a 1-d ("shard",) mesh."""
+
+    def __init__(self, cfg: ANNConfig, mesh: Mesh,
+                 axis: str = "shard"):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = mesh.shape[axis]
+        # stacked per-shard states, sharded on the leading axis
+        self.states = jax.device_put(
+            jax.vmap(lambda _: init_state(cfg))(jnp.arange(self.n_shards)),
+            NamedSharding(mesh, P(axis)),
+        )
+        self._search = self._build_search()
+        self._update = self._build_update()
+
+    # -- SPMD programs -------------------------------------------------------
+
+    def _build_search(self):
+        cfg, axis = self.cfg, self.axis
+        spec_state = P(axis)
+        n_shards = self.n_shards
+
+        @functools.partial(jax.jit, static_argnames=("k", "l"))
+        def search(states, queries, *, k: int, l: int):
+            def shard_fn(state, q):
+                state = jax.tree.map(lambda x: x[0], state)  # unstack local
+
+                def one(qv):
+                    res = greedy_search(state, cfg, qv, k=k, l=l)
+                    return res.topk_ids, res.topk_dists, res.n_comps
+
+                ids, dists, comps = jax.vmap(one)(q)         # (Q, k) local
+                # global merge: gather every shard's top-k and re-select
+                all_ids = lax.all_gather(ids, axis)          # (S, Q, k)
+                all_d = lax.all_gather(dists, axis)
+                shard_of = lax.broadcasted_iota(
+                    jnp.int32, all_ids.shape, 0
+                )
+                flat_d = all_d.transpose(1, 0, 2).reshape(q.shape[0], -1)
+                flat_i = all_ids.transpose(1, 0, 2).reshape(q.shape[0], -1)
+                flat_s = shard_of.transpose(1, 0, 2).reshape(q.shape[0], -1)
+                top_d, idx = lax.top_k(-flat_d, k)
+                gids = jnp.take_along_axis(flat_i, idx, axis=1)
+                gshard = jnp.take_along_axis(flat_s, idx, axis=1)
+                return (
+                    gids[None], gshard[None], (-top_d)[None],
+                    jnp.sum(comps)[None],
+                )
+
+            return shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(spec_state, P()),       # queries replicated
+                out_specs=(P(axis), P(axis), P(axis), P(axis)),
+                check_rep=False,  # while-loop carries mix varying/invariant axes
+            )(states, queries)
+
+        return search
+
+    def _build_update(self):
+        cfg, axis = self.cfg, self.axis
+
+        @functools.partial(jax.jit, static_argnames=("op",))
+        def update(states, payload, shard_ids, *, op: str):
+            """payload: (B, dim) vectors (insert) or (B,) slots (delete);
+            shard_ids: (B,) owner of each update."""
+
+            def shard_fn(state, payload, shard_ids):
+                state = jax.tree.map(lambda x: x[0], state)
+                me = lax.axis_index(axis)
+
+                def step(st, x):
+                    item, owner = x
+                    mine = owner == me
+
+                    def apply(s):
+                        if op == "insert":
+                            s, stats = insert(s, cfg, item)
+                            return s, stats.slot
+                        s, _ = ip_delete(s, cfg, item.astype(jnp.int32))
+                        return s, jnp.int32(0)
+
+                    def skip(s):
+                        return s, jnp.int32(INVALID)
+
+                    return lax.cond(mine, apply, skip, st)
+
+                st, slots = lax.scan(step, state, (payload, shard_ids))
+                return (
+                    jax.tree.map(lambda x: x[None], st),
+                    slots[None],
+                )
+
+            return shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(axis), P(), P()),
+                out_specs=(P(axis), P(axis)),
+                check_rep=False,
+            )(states, payload, shard_ids)
+
+        return update
+
+    # -- host API -------------------------------------------------------------
+
+    def route(self, ext_ids: np.ndarray) -> np.ndarray:
+        """Owner shard of each external id (stable hash routing)."""
+        return (np.asarray(ext_ids, np.int64) * 2654435761 % 2**31
+                % self.n_shards).astype(np.int32)
+
+    def insert(self, ext_ids, vectors) -> np.ndarray:
+        owners = self.route(ext_ids)
+        self.states, slots = self._update(
+            self.states, jnp.asarray(vectors, jnp.float32),
+            jnp.asarray(owners), op="insert",
+        )
+        local = np.asarray(slots)                # (S, B) INVALID off-owner
+        return local.max(axis=0), owners         # slot within owner shard
+
+    def delete_slots(self, slots, owners) -> None:
+        self.states, _ = self._update(
+            self.states, jnp.asarray(slots, jnp.float32),
+            jnp.asarray(owners), op="delete",
+        )
+
+    def search(self, queries, k=10, l=64):
+        ids, shards, dists, comps = self._search(
+            self.states, jnp.asarray(queries, jnp.float32), k=k, l=l
+        )
+        # every shard computed the same global merge; take shard 0's copy
+        return (np.asarray(ids)[0], np.asarray(shards)[0],
+                np.asarray(dists)[0], int(np.asarray(comps).sum()))

@@ -1,0 +1,93 @@
+"""Runbook driver: replay an update stream against a StreamingIndex and
+record per-step recall / distance computations / throughput (Figure 1)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from .index import StreamingIndex
+from .runbook import Runbook
+from .types import ANNConfig
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    step: int
+    n_active: int
+    recall: float
+    comps_per_query: float
+    qps: float
+
+
+@dataclasses.dataclass
+class RunbookReport:
+    name: str
+    mode: str
+    steps: List[StepMetrics]
+    counters: "object"
+    avg_recall: float = 0.0
+
+    def summary(self) -> dict:
+        c = self.counters
+        return {
+            "runbook": self.name,
+            "mode": self.mode,
+            "avg_recall@10": round(self.avg_recall, 4),
+            "insert_s": round(c.insert_s, 3),
+            "delete_s": round(c.delete_s, 3),
+            "search_s": round(c.search_s, 3),
+            "n_consolidations": c.n_consolidations,
+        }
+
+
+def run_runbook(
+    index: StreamingIndex,
+    rb: Runbook,
+    *,
+    k: int = 10,
+    eval_every: int = 1,
+    max_steps: Optional[int] = None,
+    update_batch: int = 0,
+    verbose: bool = False,
+) -> RunbookReport:
+    metrics: List[StepMetrics] = []
+    steps = rb.steps[:max_steps] if max_steps else rb.steps
+    for t, step in enumerate(steps):
+        if len(step.insert_ids):
+            index.insert(step.insert_ids, rb.data[step.insert_ids])
+        if len(step.delete_ids):
+            index.delete(step.delete_ids)
+        do_eval = (t % eval_every == 0) and index.n_active > k
+        if do_eval:
+            t0 = time.perf_counter()
+            comps0 = index.counters.search_comps
+            r = index.recall(rb.queries, k=k)
+            dt = time.perf_counter() - t0
+            dcomps = index.counters.search_comps - comps0
+            metrics.append(
+                StepMetrics(
+                    step=t,
+                    n_active=index.n_active,
+                    recall=r,
+                    comps_per_query=dcomps / len(rb.queries),
+                    qps=len(rb.queries) / max(dt, 1e-9),
+                )
+            )
+            if verbose:
+                m = metrics[-1]
+                print(
+                    f"[{rb.name}:{index.mode}] step {t:4d} active={m.n_active:6d} "
+                    f"recall@{k}={m.recall:.3f} comps/q={m.comps_per_query:.0f}"
+                )
+    evald = [m for m in metrics if m.step >= rb.eval_from]
+    avg = float(np.mean([m.recall for m in evald])) if evald else float("nan")
+    return RunbookReport(
+        name=rb.name,
+        mode=index.mode,
+        steps=metrics,
+        counters=index.counters,
+        avg_recall=avg,
+    )

@@ -1,0 +1,71 @@
+"""Edge mutation helpers shared by insert / delete (Algorithms 2 and 5)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .prune import robust_prune
+from .types import (
+    INVALID,
+    ANNConfig,
+    GraphState,
+    clip_ids,
+    compact_row,
+    row_contains,
+    row_count,
+)
+
+
+def append_one(state: GraphState, cfg: ANNConfig, v, u) -> GraphState:
+    """Add edge v -> u; RobustPrune v's row if it would exceed degree r.
+
+    No-ops when v/u is INVALID, u == v (self loop), u already present, or u
+    points at a dead slot.  This is Algorithm 2 lines 5-8 applied to a single
+    edge, reused by the delete algorithm's replacement-edge phases.
+    """
+    sv = clip_ids(v, cfg.n_cap)
+    su = clip_ids(u, cfg.n_cap)
+    row = state.adj[sv]
+    u_live = state.active[su] | state.tombstone[su]
+    # v must itself be live: under batched updates a stale candidate may
+    # refer to a vertex deleted earlier in the same batch
+    v_live = state.active[sv] | state.tombstone[sv]
+    skip = (
+        (v < 0) | (u < 0) | (v == u) | row_contains(row, u)
+        | ~u_live | ~v_live
+    )
+    cnt = row_count(row)
+
+    def no_op(st: GraphState) -> GraphState:
+        return st
+
+    def do_append(st: GraphState) -> GraphState:
+        return st._replace(adj=st.adj.at[sv, cnt].set(u))
+
+    def do_prune(st: GraphState) -> GraphState:
+        cand = jnp.concatenate([row, jnp.asarray(u, jnp.int32)[None]])
+        new_row = robust_prune(st, cfg, st.vectors[sv], cand, p_id=v)
+        return st._replace(adj=st.adj.at[sv].set(new_row))
+
+    def mutate(st: GraphState) -> GraphState:
+        return lax.cond(cnt < cfg.r, do_append, do_prune, st)
+
+    return lax.cond(skip, no_op, mutate, state)
+
+
+def remove_target_rows(state: GraphState, cfg: ANNConfig, row_ids, target):
+    """Vectorised removal of ``target`` from the rows listed in ``row_ids``.
+
+    ``row_ids`` i32[M], INVALID padded, assumed unique among valid entries.
+    Returns new adj.
+    """
+    safe = clip_ids(row_ids, cfg.n_cap)
+    rows = state.adj[safe]                      # (M, r)
+    hit = (rows == target) & (row_ids >= 0)[:, None]
+    cleaned = jnp.where(hit, INVALID, rows)
+    cleaned = jnp.vectorize(compact_row, signature="(r)->(r)")(cleaned)
+    # scatter only rows that actually changed; everything else (including the
+    # INVALID-padded row ids) is dropped so duplicate clip targets can't race.
+    write = jnp.any(hit, axis=1)
+    idx = jnp.where(write, row_ids, cfg.n_cap)
+    return state.adj.at[idx].set(cleaned, mode="drop")

@@ -1,0 +1,185 @@
+"""StreamingIndex — the public API over the IP-DiskANN / FreshDiskANN engine.
+
+Host-side orchestration (external-id mapping, consolidation policy, counters)
+around the pure jitted update/search kernels.  ``mode``:
+
+  * ``"ip"``    — IP-DiskANN: in-place deletes (Alg 5) + lightweight Alg 6
+                  sweep when quarantined slots exceed the threshold;
+  * ``"fresh"`` — FreshDiskANN baseline: tombstone deletes + batch
+                  consolidation (Alg 4) past the threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched import insert_many_batched, ip_delete_many_batched
+from .consolidate import fresh_consolidate, light_consolidate
+from .delete import ip_delete_many, lazy_delete_many
+from .insert import insert_many
+from .recall import brute_force_topk, recall_at_k
+from .search import search_batch
+from .types import INVALID, ANNConfig, GraphState, init_state
+
+
+@dataclasses.dataclass
+class OpCounters:
+    insert_s: float = 0.0
+    delete_s: float = 0.0        # includes consolidation (paper's accounting)
+    search_s: float = 0.0
+    n_inserts: int = 0
+    n_deletes: int = 0
+    n_queries: int = 0
+    insert_comps: int = 0
+    delete_comps: int = 0
+    search_comps: int = 0
+    n_consolidations: int = 0
+
+
+class StreamingIndex:
+    """A single-shard streaming ANNS index with external integer ids."""
+
+    def __init__(
+        self,
+        cfg: ANNConfig,
+        mode: str = "ip",
+        max_external_id: Optional[int] = None,
+        batch_updates: bool = False,
+    ):
+        """``batch_updates``: beyond-paper optimisation — run the search
+        phase of a batch of updates data-parallel (see core/batched.py)."""
+        assert mode in ("ip", "fresh")
+        self.cfg = cfg
+        self.mode = mode
+        self.batch_updates = batch_updates
+        self.state: GraphState = init_state(cfg)
+        n_ext = max_external_id or cfg.n_cap * 4
+        self._ext2slot = np.full((n_ext,), INVALID, np.int64)
+        self._slot2ext = np.full((cfg.n_cap,), INVALID, np.int64)
+        self.counters = OpCounters()
+
+    # -- updates -----------------------------------------------------------
+
+    def _apply_insert(self, ext_ids, vectors, batched: bool) -> None:
+        xs = jnp.asarray(vectors, jnp.float32)
+        ins = insert_many_batched if batched else insert_many
+        self.state, stats = ins(self.state, self.cfg, xs)
+        slots = np.asarray(stats.slot)
+        self.counters.insert_comps += int(np.asarray(stats.n_comps).sum())
+        if np.any(slots < 0):
+            raise RuntimeError("index capacity exhausted")
+        self._ext2slot[np.asarray(ext_ids)] = slots
+        self._slot2ext[slots] = np.asarray(ext_ids)
+
+    def insert(self, ext_ids: np.ndarray, vectors: np.ndarray) -> None:
+        assert len(ext_ids) == len(vectors)
+        t0 = time.perf_counter()
+        ext_ids = np.asarray(ext_ids)
+        if not self.batch_updates:
+            self._apply_insert(ext_ids, vectors, batched=False)
+        else:
+            # The batched mode's relaxed visibility (searches see the
+            # pre-batch graph) is only sound when the batch is small relative
+            # to the live graph — bootstrap serially, then use power-of-two
+            # relaxed windows capped at min(n_active, 512) so compilations
+            # stay bounded and quality matches the paper's threaded regime.
+            i = 0
+            n = len(ext_ids)
+            while i < n:
+                na = self.n_active
+                boot = 2 * self.cfg.l_build
+                if na < boot:
+                    take = min(boot - na, n - i)
+                    self._apply_insert(
+                        ext_ids[i : i + take], vectors[i : i + take],
+                        batched=False,
+                    )
+                else:
+                    c = 64
+                    while c * 2 <= min(na, 512):
+                        c *= 2
+                    take = min(c, n - i)
+                    self._apply_insert(
+                        ext_ids[i : i + take], vectors[i : i + take],
+                        batched=(take == c),
+                    )
+                i += take
+        self.counters.insert_s += time.perf_counter() - t0
+        self.counters.n_inserts += len(ext_ids)
+
+    def delete(self, ext_ids: np.ndarray) -> None:
+        t0 = time.perf_counter()
+        slots = self._ext2slot[np.asarray(ext_ids)]
+        if np.any(slots < 0):
+            raise KeyError("delete of unknown external id")
+        # pad to the next power of two with INVALID (a no-op delete): keeps
+        # the number of distinct compiled scan lengths logarithmic
+        pad = 1 << max(0, int(np.ceil(np.log2(max(len(slots), 1)))))
+        ps = jnp.asarray(
+            np.concatenate([slots, np.full(pad - len(slots), -1)]), jnp.int32
+        )
+        if self.mode == "ip":
+            dele = (ip_delete_many_batched if self.batch_updates
+                    else ip_delete_many)
+            self.state, stats = dele(self.state, self.cfg, ps)
+            self.counters.delete_comps += int(np.asarray(stats.n_comps).sum())
+        else:
+            self.state, _ = lazy_delete_many(self.state, self.cfg, ps)
+        self._ext2slot[np.asarray(ext_ids)] = INVALID
+        self._slot2ext[slots] = INVALID
+        self.counters.delete_s += time.perf_counter() - t0
+        self.counters.n_deletes += len(ext_ids)
+        self.maybe_consolidate()
+
+    def maybe_consolidate(self, force: bool = False) -> bool:
+        n_active = int(self.state.n_active)
+        n_pending = int(self.state.n_pending)
+        thresh = self.cfg.consolidation_threshold * max(n_active, 1)
+        if not force and n_pending <= thresh:
+            return False
+        if n_pending == 0:
+            return False
+        t0 = time.perf_counter()
+        if self.mode == "ip":
+            self.state = light_consolidate(self.state, self.cfg)
+        else:
+            self.state = fresh_consolidate(self.state, self.cfg)
+        jax.block_until_ready(self.state.adj)
+        self.counters.delete_s += time.perf_counter() - t0
+        self.counters.n_consolidations += 1
+        return True
+
+    # -- queries -----------------------------------------------------------
+
+    def search(self, queries: np.ndarray, k: int = 10, l: Optional[int] = None):
+        """Returns (ext_ids (Q, k), dists (Q, k))."""
+        t0 = time.perf_counter()
+        l = l or self.cfg.l_search
+        res = search_batch(
+            self.state, self.cfg, jnp.asarray(queries, jnp.float32), k=k, l=l
+        )
+        ids = np.asarray(res.topk_ids)
+        self.counters.search_comps += int(np.asarray(res.n_comps).sum())
+        self.counters.search_s += time.perf_counter() - t0
+        self.counters.n_queries += queries.shape[0]
+        ext = np.where(ids >= 0, self._slot2ext[np.clip(ids, 0, None)], INVALID)
+        return ext, np.asarray(res.topk_dists), ids
+
+    # -- evaluation --------------------------------------------------------
+
+    def recall(self, queries: np.ndarray, k: int = 10,
+               l: Optional[int] = None) -> float:
+        _, _, slot_ids = self.search(queries, k=k, l=l)
+        true_ids, _ = brute_force_topk(
+            self.state, self.cfg, jnp.asarray(queries, jnp.float32), k=k
+        )
+        return recall_at_k(slot_ids, true_ids, k)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.state.n_active)

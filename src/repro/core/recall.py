@@ -1,0 +1,39 @@
+"""Ground truth + Recall@k (Definition 2.1)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distance import BIG, pair_dists
+from .types import ANNConfig, GraphState
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def brute_force_topk(state: GraphState, cfg: ANNConfig, queries, *, k: int):
+    """Exact top-k over the live point set.  queries: (Q, D)."""
+    q_norms = (
+        jnp.sum(queries * queries, axis=1)
+        if cfg.metric == "l2"
+        else jnp.zeros((queries.shape[0],), jnp.float32)
+    )
+    d = pair_dists(cfg.metric, queries, q_norms, state.vectors, state.norms)
+    d = jnp.where(state.active[None, :], d, BIG)
+    neg, idx = jax.lax.top_k(-d, k)
+    return jnp.where(jnp.isfinite(neg), idx, -1), -neg
+
+
+def recall_at_k(found_ids, true_ids, k: int) -> float:
+    """Mean |G ∩ A| / k over the query batch (slot-id space)."""
+    found = np.asarray(found_ids)[:, :k]
+    true = np.asarray(true_ids)[:, :k]
+    hits = 0
+    for f, t in zip(found, true):
+        t_set = set(int(x) for x in t if x >= 0)
+        hits += len(t_set.intersection(int(x) for x in f if x >= 0))
+    denom = max(
+        1, sum(min(k, int((t >= 0).sum())) for t in true)
+    )
+    return hits / denom

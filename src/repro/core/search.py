@@ -1,0 +1,185 @@
+"""GreedySearch (Algorithm 1) as a fixed-shape ``lax.while_loop`` beam search.
+
+TPU adaptation of the paper's priority-queue search:
+
+  * the beam is a fixed-width ``(l,)`` sorted triple (ids, dists, expanded);
+    the per-hop "pop min + push R neighbours" becomes one sort-merge of
+    ``l + R`` keys (sorts vectorize across the query batch; heaps do not);
+  * the visited hash-set becomes a ``bool[n_cap]`` bitmap ("seen");
+  * termination (all top-l entries expanded) is the while_loop predicate,
+    with a ``max_visits`` safety bound.
+
+Tombstoned slots are navigated but excluded from the visited list and from
+the returned top-k, exactly as FreshDiskANN's lazy-delete search does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .distance import BIG, dists_to_ids
+from .types import INVALID, ANNConfig, GraphState, clip_ids, navigable
+
+
+class SearchResult(NamedTuple):
+    topk_ids: jax.Array       # i32[k]
+    topk_dists: jax.Array     # f32[k]
+    visited_ids: jax.Array    # i32[max_visits]  expansion order, INVALID padded
+    visited_dists: jax.Array  # f32[max_visits]
+    n_visited: jax.Array      # i32[]
+    n_comps: jax.Array        # i32[]  distance computations issued
+    n_hops: jax.Array         # i32[]  expansions
+
+
+class _Loop(NamedTuple):
+    beam_ids: jax.Array
+    beam_dists: jax.Array
+    beam_exp: jax.Array
+    seen: jax.Array
+    vis_ids: jax.Array
+    vis_dists: jax.Array
+    n_vis: jax.Array
+    n_comps: jax.Array
+    n_hops: jax.Array
+
+
+DistanceFn = Callable[[GraphState, ANNConfig, jax.Array, jax.Array], jax.Array]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "k", "l", "max_visits", "distance_fn")
+)
+def greedy_search(
+    state: GraphState,
+    cfg: ANNConfig,
+    q: jax.Array,
+    *,
+    k: int,
+    l: int,
+    max_visits: Optional[int] = None,
+    distance_fn: Optional[DistanceFn] = None,
+) -> SearchResult:
+    """Beam search for the nearest neighbours of ``q`` (Algorithm 1)."""
+    if max_visits is None:
+        max_visits = cfg.max_visits(l)
+    dist_fn = distance_fn or dists_to_ids
+    nav = navigable(state)
+    returnable = state.active
+
+    start = state.start
+    d0 = dist_fn(state, cfg, q, start[None])[0]
+
+    beam_ids = jnp.full((l,), INVALID, jnp.int32).at[0].set(start)
+    beam_dists = jnp.full((l,), BIG, jnp.float32).at[0].set(
+        jnp.where(start >= 0, d0, BIG)
+    )
+    beam_exp = jnp.zeros((l,), bool)
+    seen = jnp.zeros((cfg.n_cap,), bool).at[clip_ids(start[None], cfg.n_cap)].set(
+        start >= 0
+    )
+
+    init = _Loop(
+        beam_ids=beam_ids,
+        beam_dists=beam_dists,
+        beam_exp=beam_exp,
+        seen=seen,
+        vis_ids=jnp.full((max_visits,), INVALID, jnp.int32),
+        vis_dists=jnp.full((max_visits,), BIG, jnp.float32),
+        n_vis=jnp.int32(0),
+        n_comps=jnp.where(start >= 0, jnp.int32(1), jnp.int32(0)),
+        n_hops=jnp.int32(0),
+    )
+
+    def cond(s: _Loop):
+        frontier = (s.beam_ids >= 0) & ~s.beam_exp & jnp.isfinite(s.beam_dists)
+        return jnp.any(frontier) & (s.n_hops < max_visits)
+
+    def body(s: _Loop):
+        # --- pop the closest unexpanded vertex -------------------------------
+        frontier_d = jnp.where(
+            (s.beam_ids >= 0) & ~s.beam_exp, s.beam_dists, BIG
+        )
+        i = jnp.argmin(frontier_d)
+        v = s.beam_ids[i]
+        dv = s.beam_dists[i]
+        beam_exp = s.beam_exp.at[i].set(True)
+
+        # --- record in visited list (only live/returnable vertices) ---------
+        v_ret = returnable[clip_ids(v, cfg.n_cap)]
+        vis_ids = s.vis_ids.at[s.n_vis].set(v)
+        vis_dists = s.vis_dists.at[s.n_vis].set(dv)
+        n_vis = s.n_vis + v_ret.astype(jnp.int32)
+
+        # --- expand ----------------------------------------------------------
+        nbrs = state.adj[clip_ids(v, cfg.n_cap)]
+        safe_nbrs = clip_ids(nbrs, cfg.n_cap)
+        fresh = (nbrs >= 0) & nav[safe_nbrs] & ~s.seen[safe_nbrs]
+        masked = jnp.where(fresh, nbrs, INVALID)
+        nd = dist_fn(state, cfg, q, masked)
+        n_comps = s.n_comps + jnp.sum(fresh).astype(jnp.int32)
+        seen = s.seen.at[jnp.where(fresh, nbrs, cfg.n_cap)].set(
+            True, mode="drop"
+        )
+
+        # --- sort-merge beam + neighbours, keep top-l ------------------------
+        all_d = jnp.concatenate([s.beam_dists, nd])
+        all_i = jnp.concatenate([s.beam_ids, masked])
+        all_e = jnp.concatenate([beam_exp, jnp.zeros_like(fresh)])
+        sd, si, se = lax.sort((all_d, all_i, se_key(all_e)), num_keys=1)
+        return _Loop(
+            beam_ids=si[:l],
+            beam_dists=sd[:l],
+            beam_exp=se[:l].astype(bool),
+            seen=seen,
+            vis_ids=vis_ids,
+            vis_dists=vis_dists,
+            n_vis=n_vis,
+            n_comps=n_comps,
+            n_hops=s.n_hops + 1,
+        )
+
+    out = lax.while_loop(cond, body, init)
+
+    # --- final top-k over the beam, filtered to live vertices ----------------
+    ret = returnable[clip_ids(out.beam_ids, cfg.n_cap)] & (out.beam_ids >= 0)
+    final_d = jnp.where(ret, out.beam_dists, BIG)
+    kk = min(k, l)  # the beam holds l entries; pad the tail with INVALID
+    top_d, top_i = lax.top_k(-final_d, kk)
+    topk_ids = jnp.where(jnp.isfinite(-top_d), out.beam_ids[top_i], INVALID)
+    if kk < k:
+        topk_ids = jnp.pad(topk_ids, (0, k - kk), constant_values=INVALID)
+        top_d = jnp.pad(top_d, (0, k - kk), constant_values=-BIG)
+    return SearchResult(
+        topk_ids=topk_ids,
+        topk_dists=-top_d,
+        visited_ids=out.vis_ids,
+        visited_dists=out.vis_dists,
+        n_visited=out.n_vis,
+        n_comps=out.n_comps,
+        n_hops=out.n_hops,
+    )
+
+
+def se_key(e: jax.Array) -> jax.Array:
+    """Bool flags ride through lax.sort as int32 payload."""
+    return e.astype(jnp.int32)
+
+
+def search_batch(
+    state: GraphState,
+    cfg: ANNConfig,
+    queries: jax.Array,
+    *,
+    k: int,
+    l: int,
+    distance_fn: Optional[DistanceFn] = None,
+) -> SearchResult:
+    """vmapped greedy search over a (B, dim) query batch."""
+    fn = functools.partial(
+        greedy_search, state, cfg, k=k, l=l, distance_fn=distance_fn
+    )
+    return jax.vmap(fn)(queries)

@@ -1,0 +1,140 @@
+"""Core data structures for the streaming ANNS graph index.
+
+The paper's CPU implementation stores the graph as per-node ``Vec<u32>``
+adjacency lists guarded by locks.  The TPU-native representation used here is
+a dense slot matrix:
+
+  * ``vectors[n_cap, dim]``  — vector payload per slot
+  * ``adj[n_cap, r]``        — out-neighbour ids, ``INVALID`` (-1) padded and
+                               kept front-compacted
+  * per-slot status masks    — active / tombstone / quarantine
+  * a free stack             — slot allocator (paper: free-list)
+
+All updates are pure functions ``GraphState -> GraphState`` so the update
+stream can be expressed as ``lax.scan`` (serial, paper-faithful) or batched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID = -1
+
+# ---------------------------------------------------------------------------
+# Static configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ANNConfig:
+    """Static (hashable) configuration of a streaming graph index.
+
+    Mirrors the paper's parameters: R (degree), l_b / l_s / l_d (beam widths
+    for build / search / delete), alpha (prune slack), k (delete candidate
+    list size), c (edge copies per delete).
+    """
+
+    dim: int
+    n_cap: int
+    r: int = 64
+    l_build: int = 128
+    l_search: int = 128
+    l_delete: int = 128
+    k_delete: int = 50
+    n_copies: int = 3  # the paper's ``c``
+    alpha: float = 1.2
+    metric: str = "l2"  # "l2" (squared euclidean) | "ip" (negative dot)
+    # Hard bound on beam-search expansions (while_loop safety net).  The
+    # search converges when the top-l beam is fully expanded, typically after
+    # ~l + a few dozen expansions.
+    max_visit_slack: int = 64
+    consolidation_threshold: float = 0.2
+
+    def max_visits(self, l: int) -> int:
+        return l + self.max_visit_slack
+
+    def __post_init__(self):
+        assert self.metric in ("l2", "ip"), self.metric
+        assert self.r >= 1 and self.n_cap >= 1 and self.dim >= 1
+
+
+# ---------------------------------------------------------------------------
+# Graph state (pytree)
+# ---------------------------------------------------------------------------
+
+
+class GraphState(NamedTuple):
+    """The full mutable state of one index shard, as a JAX pytree."""
+
+    vectors: jax.Array     # f32[n_cap, dim]
+    norms: jax.Array       # f32[n_cap]  squared L2 norms (l2 metric fast path)
+    adj: jax.Array         # i32[n_cap, r]  out-neighbours, INVALID padded
+    active: jax.Array      # bool[n_cap]  live and returnable
+    tombstone: jax.Array   # bool[n_cap]  lazily deleted (fresh mode): still navigable
+    quarantine: jax.Array  # bool[n_cap]  freed in-place (ip mode): awaiting Alg-6 sweep
+    free_stack: jax.Array  # i32[n_cap]  slot allocator stack
+    free_top: jax.Array    # i32[]  number of free slots
+    start: jax.Array       # i32[]  entry point (INVALID when empty)
+    n_active: jax.Array    # i32[]
+    n_pending: jax.Array   # i32[]  tombstoned (fresh) or quarantined (ip) count
+
+
+def init_state(cfg: ANNConfig, dtype=jnp.float32) -> GraphState:
+    n = cfg.n_cap
+    return GraphState(
+        vectors=jnp.zeros((n, cfg.dim), dtype),
+        norms=jnp.zeros((n,), jnp.float32),
+        adj=jnp.full((n, cfg.r), INVALID, jnp.int32),
+        active=jnp.zeros((n,), bool),
+        tombstone=jnp.zeros((n,), bool),
+        quarantine=jnp.zeros((n,), bool),
+        free_stack=jnp.arange(n - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.int32(n),
+        start=jnp.int32(INVALID),
+        n_active=jnp.int32(0),
+        n_pending=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Small row utilities
+# ---------------------------------------------------------------------------
+
+
+def navigable(state: GraphState) -> jax.Array:
+    """Slots the greedy search may traverse (live or tombstoned)."""
+    return state.active | state.tombstone
+
+
+def row_count(row: jax.Array) -> jax.Array:
+    return jnp.sum(row >= 0).astype(jnp.int32)
+
+
+def row_contains(row: jax.Array, u: jax.Array) -> jax.Array:
+    return jnp.any(row == u)
+
+
+def compact_row(row: jax.Array) -> jax.Array:
+    """Move valid entries to the front, preserving order (stable argsort)."""
+    order = jnp.argsort(row < 0, stable=True)
+    return row[order]
+
+
+def mask_duplicates(ids: jax.Array) -> jax.Array:
+    """Replace duplicate ids (keep first occurrence) with INVALID.  O(C^2)."""
+    eq = ids[:, None] == ids[None, :]
+    earlier = jnp.tril(jnp.ones_like(eq), k=-1)
+    dup = jnp.any(eq & earlier, axis=1)
+    return jnp.where(dup | (ids < 0), INVALID, ids)
+
+
+def clip_ids(ids: jax.Array, n_cap: int) -> jax.Array:
+    return jnp.clip(ids, 0, n_cap - 1)
+
+
+def as_numpy_state(state: GraphState) -> dict:
+    return {k: np.asarray(v) for k, v in state._asdict().items()}

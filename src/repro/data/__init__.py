@@ -1,0 +1,5 @@
+from .pipeline import (
+    ClickStream,
+    TokenStream,
+    VectorStream,
+)

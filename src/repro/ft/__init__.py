@@ -1,0 +1,1 @@
+from .supervisor import SimulatedFailure, Supervisor

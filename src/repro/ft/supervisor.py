@@ -1,0 +1,82 @@
+"""Fault-tolerant execution: checkpoint/restart supervision + failure
+injection, and the straggler/elastic design notes for 1000+ nodes.
+
+``Supervisor.run`` drives a step function under a restart loop: any exception
+(including injected ``SimulatedFailure``s — standing in for a TPU worker
+dropping out) rolls the training state back to the last complete checkpoint
+and resumes.  Because the data pipeline is stateless-deterministic
+(``batch = f(seed, step)``), resume is *bit-exact*: tests assert the final
+state equals an uninterrupted run.
+
+1000-node design (per DESIGN.md §5):
+  * node failure -> the job restarts from the last checkpoint on a healthy
+    slice; checkpoints are mesh-agnostic so a *smaller* slice can resume
+    (elastic rescale — exercised in tests/test_ft.py by restoring onto a
+    different device count);
+  * stragglers -> synchronous SPMD absorbs jitter in collectives; the
+    serving path races redundant shards (core/distributed.py fan-out);
+    persistent stragglers are ejected = elastic rescale;
+  * checkpoint cadence amortisation: write every N steps, keep K,
+    asynchronous host write while step N+1 runs (single-process here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+from ..checkpoint import CheckpointManager, restore_onto
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected stand-in for a node loss / preemption."""
+
+
+@dataclasses.dataclass
+class Supervisor:
+    manager: CheckpointManager
+    checkpoint_every: int = 10
+    max_restarts: int = 10
+
+    def run(
+        self,
+        init_state: Any,
+        step_fn: Callable[[Any, int], Any],
+        n_steps: int,
+        *,
+        shardings: Any = None,
+        fail_at: Optional[Dict[int, int]] = None,
+        log: Optional[Callable[[str], None]] = None,
+    ):
+        """Run ``state = step_fn(state, t)`` for t in [0, n_steps) under
+        restart supervision.  ``fail_at`` maps step -> how many times to
+        inject a failure at that step (for tests)."""
+        log = log or (lambda s: None)
+        fail_budget = dict(fail_at or {})
+        state = init_state
+        restarts = 0
+        t = 0
+        while t < n_steps:
+            try:
+                if fail_budget.get(t, 0) > 0:
+                    fail_budget[t] -= 1
+                    raise SimulatedFailure(f"injected failure at step {t}")
+                state = step_fn(state, t)
+                t += 1
+                if t % self.checkpoint_every == 0 or t == n_steps:
+                    self.manager.save(t, state)
+                    log(f"checkpointed step {t}")
+            except Exception as e:  # noqa: BLE001
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                latest = self.manager.latest()
+                log(f"failure at step {t} ({e}); restarting from "
+                    f"{latest if latest is not None else 'scratch'}")
+                if latest is None:
+                    state, t = init_state, 0
+                else:
+                    _, tree, _ = self.manager.load(latest, like=state)
+                    state = restore_onto(tree, shardings)
+                    t = latest
+        return state, {"restarts": restarts, "final_step": t}

@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot-spots (validated in
+# interpret mode on CPU; Mosaic-compiled on TPU).
+from . import ops

@@ -1,0 +1,79 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU CI executes the kernel bodies in
+Python); on a TPU backend the Mosaic path compiles.  The engine integration
+point is ``make_kernel_distance_fn`` which plugs into
+``repro.core.search.greedy_search(distance_fn=...)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gather_distance import gather_distance
+from .topk_score import topk_score
+from . import ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gather_distances(ids, query, vectors, *, metric="l2", interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return gather_distance(
+        ids, query, vectors, metric=metric, interpret=interpret
+    )
+
+
+def topk_search(queries, vectors, norms=None, *, k, metric="l2",
+                tile_n=1024, interpret=None):
+    """Exact top-k scoring.  Pads the candidate table to the tile size with
+    +inf-distance rows when needed (production tables should be pre-aligned
+    so the pad copy never happens on the hot path)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = vectors.shape
+    if norms is None:
+        norms = jnp.sum(vectors * vectors, axis=1)
+    tile_n = min(tile_n, max(n, 1))
+    pad = (-n) % tile_n
+    if pad:
+        vectors = jnp.concatenate(
+            [vectors, jnp.zeros((pad, d), vectors.dtype)], axis=0
+        )
+        norms = jnp.concatenate(
+            [norms, jnp.full((pad,), jnp.inf, norms.dtype)], axis=0
+        )
+    dists, ids = topk_score(
+        queries, vectors, norms, k=k, metric=metric, tile_n=tile_n,
+        interpret=interpret,
+    )
+    # padded ip rows score 0; mask anything out of range
+    valid = ids < n
+    return (
+        jnp.where(valid, dists, jnp.inf),
+        jnp.where(valid, ids, -1),
+    )
+
+
+def make_kernel_distance_fn(*, interpret=None):
+    """A drop-in ``distance_fn`` for ``repro.core.search.greedy_search``."""
+
+    def distance_fn(state, cfg, q, ids):
+        return gather_distances(
+            ids, q, state.vectors, metric=cfg.metric, interpret=interpret
+        )
+
+    return distance_fn
+
+
+__all__ = [
+    "gather_distances",
+    "topk_search",
+    "make_kernel_distance_fn",
+    "ref",
+]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_distance_ref(ids, query, vectors, *, metric: str = "l2"):
+    """f32[K] distances from query to vectors[ids]; +inf where ids < 0."""
+    safe = jnp.clip(ids, 0, vectors.shape[0] - 1)
+    rows = vectors[safe]
+    prod = rows @ query
+    if metric == "l2":
+        d = jnp.dot(query, query) + jnp.sum(rows * rows, axis=1) - 2.0 * prod
+    else:
+        d = -prod
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def topk_score_ref(queries, vectors, norms, *, k: int, metric: str = "l2"):
+    """(dists f32[B, k], ids i32[B, k]) ascending by distance."""
+    prod = queries @ vectors.T                       # (B, N)
+    if metric == "l2":
+        q2 = jnp.sum(queries * queries, axis=1)
+        d = q2[:, None] + norms[None, :] - 2.0 * prod
+    else:
+        d = -prod
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialisation, and the production meshes need 512 placeholder host devices.
+(Smoke tests and benches never import this module — they see 1 device.)
+
+Per cell this runs
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...,
+                          donate_argnums=0).lower(state, inputs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+and records memory / FLOPs / collective traffic + the three roofline terms
+to ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    python -m repro.launch.dryrun --arch all --mesh both
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    python -m repro.launch.dryrun --include-skipped   # bonus long_500k cells
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import all_archs, axes_of, get_arch
+from .hlo_analysis import roofline
+from .hlo_cost import analyze as hlo_analyze
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _shardify(mesh, tree):
+    return jax.tree.map(
+        lambda spec: jax.sharding.NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def run_cell(spec, shape, *, multi_pod: bool, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = axes_of(mesh)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": spec.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "n_devices": mesh.size,
+        "skip": shape.skip,
+    }
+    t0 = time.time()
+    try:
+        state = spec.abstract_state(shape)
+        inputs = spec.abstract_inputs(shape)
+        step = spec.make_step(shape, axes)
+        in_sh = (
+            _shardify(mesh, spec.state_shardings(shape, axes)),
+            _shardify(mesh, spec.input_shardings(shape, axes)),
+        )
+        out_sh = _shardify(mesh, spec.out_shardings(shape, axes))
+        with mesh:
+            jitted = jax.jit(
+                step, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, inputs)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            terms = roofline(
+                compiled, spec.model_flops(shape), mesh.size, hlo_text=hlo
+            )
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_bytes_per_device": (
+                    mem.argument_size_in_bytes
+                    + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes
+                    - mem.alias_size_in_bytes
+                ),
+            },
+            collectives=hlo_analyze(hlo)["collectives"],
+            roofline=terms.as_dict(),
+        )
+        if verbose:
+            m = rec["memory"]
+            r = rec["roofline"]
+            print(
+                f"[ok] {spec.name:24s} {shape.name:14s} {mesh_name:8s} "
+                f"compile={rec['compile_s']:6.1f}s "
+                f"mem/dev={m['peak_bytes_per_device']/2**30:6.2f}GiB "
+                f"dominant={r['dominant']:10s} "
+                f"roofline={r['roofline_fraction']:.3f}",
+                flush=True,
+            )
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec.update(
+            status="error",
+            compile_s=round(time.time() - t0, 1),
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-2000:],
+        )
+        if verbose:
+            print(f"[ERR] {spec.name} {shape.name} {mesh_name}: {e}",
+                  flush=True)
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh_name: str) -> Path:
+    safe = arch.replace("/", "_")
+    return OUT_DIR / f"{safe}__{shape}__{mesh_name}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--include-skipped", action="store_true",
+                    help="also attempt cells marked skip (bonus long_500k)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = all_archs() if args.arch == "all" else {args.arch: get_arch(args.arch)}
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_err = n_skip = 0
+    for name, spec in sorted(archs.items()):
+        for sname, shape in spec.shapes().items():
+            if args.shape != "all" and sname != args.shape:
+                continue
+            if shape.skip and not args.include_skipped:
+                n_skip += 1
+                print(f"[skip] {name} {sname}: {shape.skip}", flush=True)
+                continue
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = cell_path(name, sname, mesh_name)
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    if rec.get("status") == "ok":
+                        print(f"[cached] {name} {sname} {mesh_name}",
+                              flush=True)
+                        n_ok += 1
+                        continue
+                rec = run_cell(spec, shape, multi_pod=multi)
+                path.write_text(json.dumps(rec, indent=1))
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+    print(f"\ndry-run complete: ok={n_ok} errors={n_err} "
+          f"skipped={n_skip}", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

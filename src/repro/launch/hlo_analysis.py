@@ -1,0 +1,150 @@
+"""Post-partitioning HLO analysis: collective-traffic accounting and the
+three roofline terms (compute / memory / collective).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-op counts and result bytes from post-SPMD HLO.
+
+    Result-shape bytes are the per-device payload; for ring algorithms the
+    wire traffic is ~(n-1)/n of that per hop — we record the payload and let
+    the roofline term divide by link bandwidth (documented approximation).
+    """
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "%name = TYPE op-name(", including fusion-wrapped variants
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        base = op.rstrip("0123456789.").replace("-start", "").replace(
+            "-done", ""
+        )
+        for cname in _COLLECTIVES:
+            if base == cname or base == cname + "-start":
+                if op.endswith("-done"):
+                    break  # counted at -start
+                e = stats.setdefault(cname, {"count": 0, "bytes": 0})
+                e["count"] += 1
+                e["bytes"] += _shape_bytes(type_str)
+                break
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput at the dominant bound vs peak compute."""
+        if self.bound_s <= 0:
+            return float("nan")
+        useful_per_dev = self.model_flops / self.n_devices
+        return useful_per_dev / self.bound_s / PEAK_FLOPS
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(compiled, model_flops: float, n_devices: int,
+             hlo_text: str | None = None) -> RooflineTerms:
+    """Roofline terms from the post-SPMD HLO.
+
+    Uses the trip-count-aware analyzer in ``hlo_cost`` — XLA's own
+    ``cost_analysis()`` counts while-loop (scan) bodies once, under-reporting
+    scan-over-layers models by ~n_layers (validated in EXPERIMENTS.md
+    §Dry-run methodology).
+    """
+    from . import hlo_cost
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    r = hlo_cost.analyze(text)
+    flops = float(r["flops"])
+    byts = float(r["bytes"])
+    coll_bytes = float(r["collective_bytes"])
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes=coll_bytes,
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )

@@ -1,0 +1,154 @@
+"""GCN family (full-batch SpMM regime + sampled minibatch regime).
+
+JAX has no CSR SpMM — message passing is built from the required primitives:
+``jnp.take`` (gather source features) + ``jax.ops.segment_sum`` (scatter-add
+into destinations).  This *is* the system's sparse layer, per the assignment.
+
+Three execution shapes:
+  * full-batch (cora / ogb-products): edge-list segment-sum over the whole
+    graph, symmetric GCN normalisation;
+  * sampled minibatch (reddit-scale): a real uniform neighbour sampler over
+    CSR (fanout 15-10), mean aggregation over the sampled blocks;
+  * batched small graphs (molecule): disjoint-union batching with per-graph
+    mean pooling for graph classification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import cross_entropy_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_feat: int = 1433
+    n_classes: int = 7
+    aggregator: str = "mean"
+    norm: str = "sym"
+    graph_level: bool = False  # molecule: mean-pool + graph classification
+
+    def layer_dims(self):
+        dims = [self.d_feat] + [self.d_hidden] * (self.n_layers - 1)
+        return list(zip(dims, dims[1:] + [self.n_classes]))
+
+    def n_params(self) -> int:
+        return sum(i * o + o for i, o in self.layer_dims())
+
+
+def init_gcn_params(key, cfg: GCNConfig, dtype=jnp.float32):
+    params = []
+    for i, (d_in, d_out) in enumerate(cfg.layer_dims()):
+        k = jax.random.fold_in(key, i)
+        params.append({
+            "w": jax.random.normal(k, (d_in, d_out), dtype)
+            * (1.0 / jnp.sqrt(d_in)),
+            "b": jnp.zeros((d_out,), dtype),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-batch message passing (edge-list segment-sum)
+# ---------------------------------------------------------------------------
+
+
+def _sym_norm_coef(src, dst, n_nodes):
+    ones = jnp.ones_like(src, jnp.float32)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n_nodes) + 1.0
+    inv_sqrt = lax.rsqrt(deg)
+    return inv_sqrt[src] * inv_sqrt[dst], inv_sqrt
+
+
+def gcn_forward(params, cfg: GCNConfig, feats, edges, *, n_nodes: int):
+    """feats (N, F), edges (2, E) src->dst.  Returns per-node logits."""
+    src, dst = edges[0], edges[1]
+    coef, inv_sqrt = _sym_norm_coef(src, dst, n_nodes)
+    x = feats
+    for li, p in enumerate(params):
+        h = x @ p["w"]                                      # transform first
+        msg = jnp.take(h, src, axis=0) * coef[:, None]
+        agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+        # self loop with 1/deg weight (sym-normalised adjacency with selfloops)
+        agg = agg + h * (inv_sqrt * inv_sqrt)[:, None]
+        x = agg + p["b"]
+        if li < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def gcn_loss(params, cfg: GCNConfig, batch):
+    logits = gcn_forward(
+        params, cfg, batch["feats"], batch["edges"],
+        n_nodes=batch["feats"].shape[0],
+    )
+    if cfg.graph_level:
+        pooled = jax.ops.segment_sum(
+            logits, batch["graph_ids"], num_segments=batch["n_graphs"]
+        )
+        counts = jax.ops.segment_sum(
+            jnp.ones((logits.shape[0],), jnp.float32), batch["graph_ids"],
+            num_segments=batch["n_graphs"],
+        )
+        pooled = pooled / jnp.maximum(counts, 1.0)[:, None]
+        return cross_entropy_loss(pooled, batch["labels"])
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Neighbour sampling (the "real sampler" over CSR)
+# ---------------------------------------------------------------------------
+
+
+def sample_neighbors(key, row_offsets, cols, seeds, fanout: int):
+    """Uniform-with-replacement neighbour sampling from a CSR graph.
+
+    row_offsets (N+1,), cols (E,), seeds (B,) -> (B, fanout) neighbour ids.
+    Isolated nodes self-loop.
+    """
+    starts = row_offsets[seeds]
+    degs = row_offsets[seeds + 1] - starts
+    r = jax.random.randint(
+        key, (seeds.shape[0], fanout), 0, jnp.iinfo(jnp.int32).max
+    )
+    off = r % jnp.maximum(degs, 1)[:, None]
+    nbrs = cols[starts[:, None] + off]
+    return jnp.where(degs[:, None] > 0, nbrs, seeds[:, None])
+
+
+def sampled_gcn_forward(params, cfg: GCNConfig, feats, blocks):
+    """GraphSAGE-style mean aggregation over sampled blocks.
+
+    ``blocks`` is a list, innermost first: blocks[-1] are the seed nodes,
+    blocks[i] the sampled neighbours at hop (L - i): shapes
+    [(B*f1*f2,), (B*f1,), (B,)] for fanout (f2, f1).
+    """
+    h = jnp.take(feats, blocks[0], axis=0)               # deepest hop feats
+    for li, p in enumerate(params):
+        nodes = blocks[li + 1]
+        fanout = h.shape[0] // nodes.shape[0]
+        hw = h @ p["w"]
+        agg = hw.reshape(nodes.shape[0], fanout, -1).mean(axis=1)
+        self_h = jnp.take(feats, nodes, axis=0) if li == 0 else None
+        if self_h is not None:
+            agg = agg + self_h @ p["w"]
+        x = agg + p["b"]
+        if li < len(params) - 1:
+            x = jax.nn.relu(x)
+        h = x
+    return h
+
+
+def sampled_gcn_loss(params, cfg: GCNConfig, batch):
+    logits = sampled_gcn_forward(
+        params, cfg, batch["feats"],
+        [batch["hop2"], batch["hop1"], batch["seeds"]],
+    )
+    return cross_entropy_loss(logits, batch["labels"])

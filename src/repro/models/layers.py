@@ -1,0 +1,189 @@
+"""Shared transformer building blocks (pure functions over param dicts)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def constrain(x, spec):
+    """Best-effort ``with_sharding_constraint``: a no-op when there is no
+    ambient mesh (CPU smoke tests) or when ``spec`` is None."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # noqa: BLE001 — no mesh in context
+        return x
+
+
+def rms_norm(x, weight, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * lax.rsqrt(var + eps)
+    return (out * weight).astype(x.dtype)
+
+
+def nonparam_layer_norm(x, eps=1e-5):
+    """OLMo-style non-parametric LayerNorm (no scale, no bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x, weight=None):
+    if kind == "rmsnorm":
+        return rms_norm(x, weight)
+    return nonparam_layer_norm(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e6):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 1e6):
+    """x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — plain for short sequences, chunked online-softmax for long
+# ---------------------------------------------------------------------------
+
+
+def _plain_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
+    """q: (B,S,KV,G,hd)  k,v: (B,T,KV,hd).  Returns (B,S,KV,G,hd)."""
+    b, s, n_kv, g, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos
+        scores = jnp.where(mask, scores, -jnp.inf)
+    if kv_len is not None:
+        valid = jnp.arange(t)[None, :] < kv_len[:, None]      # (B, T)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", w, v)
+
+
+def _chunked_attention(q, k, v, *, causal, q_chunk=2048, kv_chunk=2048):
+    """Memory-efficient online-softmax attention (FlashAttention dataflow in
+    pure JAX): scan over query chunks; inner scan over KV chunks carrying the
+    running (max, denom, accumulator).  Never materialises the (S, T) score
+    matrix — peak intermediate is (B, KV, G, q_chunk, kv_chunk)."""
+    b, s, n_kv, g, hd = q.shape
+    t = k.shape[1]
+    nq = s // q_chunk
+    nk = t // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qc = lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+            sc = jnp.einsum(
+                "bskgh,btkh->bkgst", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if causal:
+                k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = k_pos[None, :] <= q_pos[:, None]
+                sc = jnp.where(mask, sc, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(sc), p, 0.0)
+            corr = jnp.where(
+                jnp.isfinite(m), jnp.exp(m - m_safe), 0.0
+            )
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgst,btkh->bskgh", p.astype(q.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = corr.transpose(0, 3, 1, 2)[..., None] * acc + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, n_kv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, n_kv, g, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, (acc / denom).astype(q.dtype)
+
+    _, chunks = lax.scan(q_step, None, jnp.arange(nq))   # (nq, B, qc, KV, G, hd)
+    return chunks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, n_kv, g, hd)
+
+
+def gqa_attention(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                  chunked_threshold=8192):
+    """Dispatch between plain and chunked attention by sequence length."""
+    s, t = q.shape[1], k.shape[1]
+    if s == t and s > chunked_threshold and kv_len is None:
+        return _chunked_attention(q, k, v, causal=causal)
+    return _plain_attention(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def dense_mlp(x, weights, biases=None, act=jax.nn.relu, final_act=None):
+    """Plain MLP stack used by the recsys towers."""
+    n = len(weights)
+    for i, w in enumerate(weights):
+        x = x @ w
+        if biases is not None:
+            x = x + biases[i]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def cross_entropy_loss(logits, labels, ignore_id=-1):
+    """Token-mean CE in fp32.  logits (..., V), labels (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - ll
+    mask = labels != ignore_id
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,279 @@
+"""RecSys family: DLRM (dot interaction), DIN (target attention), two-tower
+retrieval — built on an explicit EmbeddingBag (take + segment_sum), since JAX
+has no native one.  Embedding tables are the model-parallel hot path: rows are
+sharded over the full device mesh; lookups become cross-shard gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Criteo-Kaggle per-field cardinalities (DLRM RM2 regime, public counts).
+CRITEO_KAGGLE_VOCABS = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18, 15,
+    286181, 105, 142572,
+)
+# Criteo-1TB (MLPerf DLRM benchmark) per-field cardinalities.
+CRITEO_TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771, 25641295,
+    39664984, 585935, 12972, 108, 36,
+)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag — the primitive JAX lacks
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(table, flat_ids, segment_ids, n_segments: int,
+                  mode: str = "sum", weights=None):
+    """torch.nn.EmbeddingBag semantics: ragged multi-hot lookup + reduce.
+
+    table (V, d); flat_ids (L,) int32; segment_ids (L,) maps each id to its
+    bag.  Returns (n_segments, d).
+    """
+    rows = jnp.take(table, flat_ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(flat_ids, jnp.float32), segment_ids,
+            num_segments=n_segments,
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _mlp_params(key, dims: Sequence[int], dtype=jnp.float32):
+    ws, bs = [], []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        ws.append(jax.random.normal(k, (a, b), dtype) * (1.0 / jnp.sqrt(a)))
+        bs.append(jnp.zeros((b,), dtype))
+    return {"w": ws, "b": bs}
+
+
+def _mlp(p, x, final_act=None):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = jax.nn.relu(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    vocab_sizes: Tuple[int, ...] = CRITEO_KAGGLE_VOCABS
+    interaction: str = "dot"
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    def n_params(self) -> int:
+        emb = sum(self.vocab_sizes) * self.embed_dim
+        bot = sum(a * b + b for a, b in zip(self.bot_mlp, self.bot_mlp[1:]))
+        f = self.n_sparse + 1
+        top_in = self.embed_dim + f * (f - 1) // 2
+        dims = (top_in,) + self.top_mlp[1:]
+        top = sum(a * b + b for a, b in zip(dims, dims[1:]))
+        return emb + bot + top
+
+
+def init_dlrm_params(key, cfg: DLRMConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 3 + cfg.n_sparse)
+    f = cfg.n_sparse + 1
+    top_in = cfg.embed_dim + f * (f - 1) // 2
+    return {
+        "tables": {
+            f"t{i}": jax.random.normal(
+                keys[3 + i], (v, cfg.embed_dim), dtype
+            ) * (1.0 / jnp.sqrt(cfg.embed_dim))
+            for i, v in enumerate(cfg.vocab_sizes)
+        },
+        "bot": _mlp_params(keys[0], cfg.bot_mlp, dtype),
+        "top": _mlp_params(keys[1], (top_in,) + cfg.top_mlp[1:], dtype),
+    }
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense, sparse):
+    """dense (B, 13) f32; sparse (B, 26) int32 -> logits (B,)."""
+    b = dense.shape[0]
+    bot = _mlp(params["bot"], dense)                         # (B, d)
+    embs = [
+        jnp.take(params["tables"][f"t{i}"], sparse[:, i], axis=0)
+        for i in range(cfg.n_sparse)
+    ]
+    z = jnp.stack([bot] + embs, axis=1)                       # (B, F, d)
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)                     # (B, F, F)
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    inter = zz[:, iu, ju]                                     # (B, F(F-1)/2)
+    top_in = jnp.concatenate([bot, inter], axis=1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, batch):
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["sparse"])
+    return bce_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# DIN — target attention over the user behaviour sequence
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    item_vocab: int = 1_000_000
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        attn_in = 4 * d
+        attn_dims = (attn_in,) + self.attn_mlp + (1,)
+        attn = sum(a * b + b for a, b in zip(attn_dims, attn_dims[1:]))
+        mlp_in = 3 * d
+        mlp_dims = (mlp_in,) + self.mlp + (1,)
+        mlp = sum(a * b + b for a, b in zip(mlp_dims, mlp_dims[1:]))
+        return self.item_vocab * d + attn + mlp
+
+
+def init_din_params(key, cfg: DINConfig, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "items": jax.random.normal(k1, (cfg.item_vocab, d), dtype) * 0.01,
+        "attn": _mlp_params(k2, (4 * d,) + cfg.attn_mlp + (1,), dtype),
+        "mlp": _mlp_params(k3, (3 * d,) + cfg.mlp + (1,), dtype),
+    }
+
+
+def din_forward(params, cfg: DINConfig, hist, hist_len, target):
+    """hist (B, S) int32, hist_len (B,), target (B,) -> logits (B,)."""
+    h = jnp.take(params["items"], hist, axis=0)               # (B, S, d)
+    t = jnp.take(params["items"], target, axis=0)             # (B, d)
+    tb = jnp.broadcast_to(t[:, None], h.shape)
+    attn_in = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    scores = _mlp(params["attn"], attn_in)[..., 0]            # (B, S)
+    # empty histories attend to position 0 only (avoids an all -inf softmax)
+    safe_len = jnp.maximum(hist_len, 1)
+    mask = jnp.arange(cfg.seq_len)[None] < safe_len[:, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    user = jnp.einsum("bs,bsd->bd", w, h)
+    x = jnp.concatenate([user, t, user * t], axis=-1)
+    return _mlp(params["mlp"], x)[:, 0]
+
+
+def din_loss(params, cfg: DINConfig, batch):
+    logits = din_forward(
+        params, cfg, batch["hist"], batch["hist_len"], batch["target"]
+    )
+    return bce_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (in-batch sampled softmax)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    user_vocab: int = 1_000_000
+    item_vocab: int = 1_000_000
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        dims = (d,) + self.tower_mlp
+        tower = sum(a * b + b for a, b in zip(dims, dims[1:]))
+        return (self.user_vocab + self.item_vocab) * d + 2 * tower
+
+
+def init_two_tower_params(key, cfg: TwoTowerConfig, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    return {
+        "user_emb": jax.random.normal(k1, (cfg.user_vocab, d), dtype) * 0.01,
+        "item_emb": jax.random.normal(k2, (cfg.item_vocab, d), dtype) * 0.01,
+        "user_tower": _mlp_params(k3, (d,) + cfg.tower_mlp, dtype),
+        "item_tower": _mlp_params(k4, (d,) + cfg.tower_mlp, dtype),
+    }
+
+
+def two_tower_embed(params, cfg: TwoTowerConfig, user_ids, item_ids):
+    u = jnp.take(params["user_emb"], user_ids, axis=0)
+    i = jnp.take(params["item_emb"], item_ids, axis=0)
+    u = _mlp(params["user_tower"], u)
+    i = _mlp(params["item_tower"], i)
+    return u, i
+
+
+def two_tower_loss(params, cfg: TwoTowerConfig, batch):
+    """In-batch sampled softmax with logQ-style uniform correction."""
+    u, i = two_tower_embed(params, cfg, batch["user_ids"], batch["item_ids"])
+    logits = (u @ i.T).astype(jnp.float32)                    # (B, B)
+    labels = jnp.arange(u.shape[0])
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.diagonal(logits)
+    return jnp.mean(lse - ll)
+
+
+def two_tower_score_candidates(params, cfg: TwoTowerConfig, user_ids,
+                               cand_embs, k: int = 100, n_blocks: int = 1):
+    """retrieval_cand shape: one (or few) queries vs a precomputed candidate
+    embedding matrix (N_cand, d) — batched dot + top-k, never a loop.
+
+    ``n_blocks > 1``: two-phase top-k — per-block (per-shard) local top-k
+    then a merge over k*n_blocks survivors, so only k*n_blocks scores cross
+    the interconnect instead of N_cand (EXPERIMENTS.md §Perf B3)."""
+    u = jnp.take(params["user_emb"], user_ids, axis=0)
+    u = _mlp(params["user_tower"], u)
+    scores = u @ cand_embs.T                                  # (B, N_cand)
+    n = scores.shape[1]
+    if n_blocks > 1 and n % n_blocks == 0:
+        blk = scores.reshape(scores.shape[0], n_blocks, n // n_blocks)
+        l_top, l_idx = lax.top_k(blk, k)                      # (B, nb, k)
+        base = (jnp.arange(n_blocks, dtype=jnp.int32) * (n // n_blocks))
+        g_idx = l_idx + base[None, :, None]
+        flat_s = l_top.reshape(scores.shape[0], -1)
+        flat_i = g_idx.reshape(scores.shape[0], -1)
+        top, sel = lax.top_k(flat_s, k)
+        return top, jnp.take_along_axis(flat_i, sel, axis=1)
+    top, idx = lax.top_k(scores, k)
+    return top, idx

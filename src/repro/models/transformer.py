@@ -1,0 +1,437 @@
+"""Decoder-only transformer family (Qwen2/2.5, Qwen3-MoE, OLMo) with
+scan-over-layers, GQA attention, optional QKV bias / non-parametric LN / MoE.
+
+Step functions provided per serving kind:
+  * ``loss_fn / train forward``  — causal LM loss over (B, S) token batches
+  * ``prefill``                  — build the KV cache for a prompt batch
+  * ``decode_step``              — one token with a (B, S_max) KV cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from jax.sharding import PartitionSpec as P
+
+from .layers import (
+    apply_norm,
+    apply_rope,
+    constrain,
+    cross_entropy_loss,
+    gqa_attention,
+    swiglu,
+)
+from .moe import MoEConfig, init_moe_params, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"           # "rmsnorm" | "nonparam_ln" (OLMo)
+    rope_theta: float = 1e6
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = False
+    remat: bool = True
+    # Activation-sharding anchors (GSPMD needs these: the fsdp-sharded
+    # weight contractions would otherwise resolve by replicating the batch —
+    # see EXPERIMENTS.md §Perf iteration 1).  (dp_axes, tp_axis) or None.
+    dp_axes: Optional[Tuple[str, ...]] = None
+    tp_axis: Optional[str] = None
+    # How attention is split over tp_axis — chosen per arch by divisibility:
+    #   "kv": kv-head axis (kv_heads % tp == 0, e.g. OLMo MHA)
+    #   "q":  q-head axis, KV replicated (Megatron GQA style, heads % tp == 0)
+    #   "hd": head_dim axis (always divisible; qwen2.5-32b's 40 heads)
+    attn_shard: str = "kv"
+    # Megatron-style sequence parallelism for train/prefill: the residual
+    # stream (and the scan's saved carry stacks) shard S over tp, shrinking
+    # remat memory by tp_size; matmuls gather S and reduce-scatter back.
+    seq_parallel: bool = False
+    # Nested ("sqrt") remat: scan over blocks of remat_block layers, each
+    # block checkpointed as a unit.  The saved carry stacks shrink by the
+    # block factor at the cost of an inner recompute window (see
+    # EXPERIMENTS.md §Perf — this is the fix for JAX's f32 ghost copy of the
+    # scan residual stack, which resisted dtype/barrier-level removal).
+    remat_block: int = 1
+
+    def act(self, *dims):
+        """PartitionSpec for an activation.  Entries:
+        "dp" (batch axes) | "tp" (tensor axis) | "sp" (tp when
+        seq_parallel else unsharded) | "dp+sp" (flattened token dim) | None.
+        """
+        if self.dp_axes is None:
+            return None
+
+        def one(d):
+            if d == "dp":
+                return self.dp_axes
+            if d == "tp":
+                return self.tp_axis
+            if d == "sp":
+                return self.tp_axis if self.seq_parallel else None
+            if d == "dp+sp":
+                return (
+                    tuple(self.dp_axes) + (self.tp_axis,)
+                    if self.seq_parallel else self.dp_axes
+                )
+            return None
+
+        return P(*[one(d) for d in dims])
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def groups(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (for roofline MODEL_FLOPS)."""
+        d, hd, h, kv, v = self.d_model, self.hd, self.n_heads, self.n_kv_heads, self.vocab
+        attn = d * hd * (h + 2 * kv) + h * hd * d
+        if self.moe:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        else:
+            ff = 3 * d * self.d_ff
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff) + embed
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: top_k experts only)."""
+        if not self.moe:
+            return self.n_params()
+        d, hd, h, kv, v = self.d_model, self.hd, self.n_heads, self.n_kv_heads, self.vocab
+        attn = d * hd * (h + 2 * kv) + h * hd * d
+        ff = self.moe.top_k * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff) + embed
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (stacked layers for lax.scan)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: TransformerConfig, dtype=jnp.float32):
+    d, hd, h, kv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    keys = jax.random.split(key, 8)
+    s_in = 1.0 / jnp.sqrt(d)
+
+    def norm_w(shape):
+        return jnp.ones(shape, dtype) if cfg.norm == "rmsnorm" else None
+
+    def stack(f):
+        return jax.vmap(f)(jax.random.split(keys[0], cfg.n_layers))
+
+    def layer(k):
+        ks = jax.random.split(k, 8)
+        p = {
+            "attn_norm": norm_w((d,)),
+            "wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s_in,
+            "wk": jax.random.normal(ks[1], (d, kv, hd), dtype) * s_in,
+            "wv": jax.random.normal(ks[2], (d, kv, hd), dtype) * s_in,
+            "wo": jax.random.normal(ks[3], (h, hd, d), dtype)
+            * (1.0 / jnp.sqrt(h * hd)),
+            "mlp_norm": norm_w((d,)),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((h, hd), dtype)
+            p["bk"] = jnp.zeros((kv, hd), dtype)
+            p["bv"] = jnp.zeros((kv, hd), dtype)
+        if cfg.moe:
+            p["moe"] = init_moe_params(ks[4], d, cfg.moe, dtype)
+        else:
+            p["w_gate"] = jax.random.normal(ks[5], (d, cfg.d_ff), dtype) * s_in
+            p["w_up"] = jax.random.normal(ks[6], (d, cfg.d_ff), dtype) * s_in
+            p["w_down"] = jax.random.normal(ks[7], (cfg.d_ff, d), dtype) * (
+                1.0 / jnp.sqrt(cfg.d_ff)
+            )
+        p = {k_: v for k_, v in p.items() if v is not None}
+        return p
+
+    params = {
+        "embed": jax.random.normal(keys[1], (cfg.vocab, d), dtype) * 0.02,
+        "layers": stack(layer),
+        "final_norm": jnp.ones((d,), dtype) if cfg.norm == "rmsnorm" else jnp.zeros((0,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[2], (d, cfg.vocab), dtype) * s_in
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, cfg: TransformerConfig, x, positions, anchor=True):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"].astype(x.dtype))
+    if anchor:
+        if cfg.seq_parallel:
+            # sequence parallel: q (and the score tensor) shard S over tp;
+            # k/v carry the full sequence (the all-gather is the SP price)
+            q = constrain(q, cfg.act("dp", "sp", None, None))
+            kv_spec = cfg.act("dp", None, None, None)
+        else:
+            # Anchor on the head axes regardless of how the PARAMS are
+            # sharded (pjit args must divide evenly; internal values may be
+            # padded by GSPMD).  Keeps the (B, kv, g, S, T) scores sharded
+            # over tp even for kv_heads < tp (pads 2x — Megatron GQA trade).
+            q = constrain(q, cfg.act("dp", None, "tp", None))
+            kv_spec = cfg.act("dp", None, "tp", None)
+        k = constrain(k, kv_spec)
+        v = constrain(v, kv_spec)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(b, s, cfg.n_kv_heads, cfg.groups, cfg.hd)
+    return q, k, v
+
+
+def _mlp_block(p, cfg: TransformerConfig, h):
+    """SwiGLU with an explicit hidden-state anchor: ff over tp normally,
+    S over tp under sequence parallelism."""
+    g = jax.nn.silu(h @ p["w_gate"].astype(h.dtype))
+    u = h @ p["w_up"].astype(h.dtype)
+    spec = (cfg.act("dp", "sp", None) if cfg.seq_parallel
+            else cfg.act("dp", None, "tp"))
+    hidden = constrain(g * u, spec)
+    return hidden @ p["w_down"].astype(h.dtype)
+
+
+def _layer_train(p, cfg: TransformerConfig, x, positions):
+    x = constrain(x, cfg.act("dp", "sp", None))
+    h = apply_norm(cfg.norm, x, p.get("attn_norm"))
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    attn = gqa_attention(q, k, v, causal=True)
+    b, s = x.shape[:2]
+    attn = attn.reshape(b, s, cfg.n_heads, cfg.hd)
+    x = x + jnp.einsum("bshx,hxd->bsd", attn, p["wo"].astype(x.dtype))
+    x = constrain(x, cfg.act("dp", "sp", None))
+
+    h = apply_norm(cfg.norm, x, p.get("mlp_norm"))
+    if cfg.moe:
+        flat = h.reshape(-1, cfg.d_model)
+        out, aux = moe_ffn(
+            p["moe"], flat, cfg.moe,
+            dp_spec=cfg.act("dp+sp", None), ep_spec=cfg.act("tp", None, None),
+        )
+        x = x + out.reshape(x.shape)
+    else:
+        x = x + _mlp_block(p, cfg, h)
+    return constrain(x, cfg.act("dp", "sp", None)), (
+        jnp.float32(0.0) if not cfg.moe else aux
+    )
+
+
+def forward(params, cfg: TransformerConfig, tokens, compute_dtype=jnp.bfloat16):
+    """Training/prefill forward.  tokens (B, S) -> logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    x = constrain(x, cfg.act("dp", "sp", None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def one_layer(p, cfg, x, positions):
+        fn = _layer_train
+        if cfg.remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(1,),
+            )
+        return fn(p, cfg, x, positions)
+
+    blk = cfg.remat_block
+    if blk > 1 and cfg.n_layers % blk == 0:
+        # nested remat: outer scan over layer blocks (saves L/blk carries),
+        # inner scan of checkpointed layers recomputed per block
+        stacked = jax.tree.map(
+            lambda w: w.reshape((cfg.n_layers // blk, blk) + w.shape[1:]),
+            params["layers"],
+        )
+
+        def block_fn(pblk, cfg, x, positions):
+            def inner(carry, p):
+                x, aux = carry
+                x, a = one_layer(p, cfg, x, positions)
+                return (x, aux + a), None
+
+            (x, aux), _ = lax.scan(inner, (x, jnp.float32(0.0)), pblk)
+            return x, aux
+
+        block = jax.checkpoint(
+            block_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(1,),
+        )
+
+        def body(carry, pblk):
+            x, aux = carry
+            x, a = block(pblk, cfg, x, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    else:
+        def body(carry, p):
+            x, aux = carry
+            x, a = one_layer(p, cfg, x, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = apply_norm(
+        cfg.norm, x,
+        params["final_norm"] if cfg.norm == "rmsnorm" else None,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    spec = (cfg.act("dp", "sp", None) if cfg.seq_parallel
+            else cfg.act("dp", None, "tp"))
+    return constrain(logits, spec), aux
+
+
+def loss_fn(params, cfg: TransformerConfig, batch):
+    logits, aux = forward(params, cfg, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, cfg: TransformerConfig, tokens,
+            compute_dtype=jnp.bfloat16):
+    """Prompt pass: returns (last-position logits, cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    x = constrain(x, cfg.act("dp", "sp", None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, p):
+        x = constrain(x, cfg.act("dp", "sp", None))
+        h = apply_norm(cfg.norm, x, p.get("attn_norm"))
+        q, k, v = _project_qkv(p, cfg, h, positions)
+        attn = gqa_attention(q, k, v, causal=True)
+        attn = attn.reshape(b, s, cfg.n_heads, cfg.hd)
+        x = x + jnp.einsum("bshx,hxd->bsd", attn, p["wo"].astype(x.dtype))
+        x = constrain(x, cfg.act("dp", "sp", None))
+        hh = apply_norm(cfg.norm, x, p.get("mlp_norm"))
+        if cfg.moe:
+            out, _ = moe_ffn(
+                p["moe"], hh.reshape(-1, cfg.d_model), cfg.moe,
+                dp_spec=cfg.act("dp+sp", None),
+                ep_spec=cfg.act("tp", None, None),
+            )
+            x = x + out.reshape(x.shape)
+        else:
+            x = x + _mlp_block(p, cfg, hh)
+        return constrain(x, cfg.act("dp", "sp", None)), (k, v)
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"])
+    x = apply_norm(
+        cfg.norm, x,
+        params["final_norm"] if cfg.norm == "rmsnorm" else None,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(x.dtype))
+    logits = constrain(logits, cfg.act("dp", "tp"))
+    cache = {
+        "k": ks, "v": vs,
+        "len": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens,
+                compute_dtype=jnp.bfloat16):
+    """One decode step.  tokens (B,) -> (logits (B, V), new cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None].astype(compute_dtype)   # (B, 1, D)
+    x = constrain(x, cfg.act("dp", "sp", None))
+    positions = cache["len"][:, None]                            # (B, 1)
+
+    def body(carry, inp):
+        # the cache is threaded as the scan CARRY (sliced/updated per layer)
+        # rather than xs/ys: stacking it as xs lets XLA hoist the bf16->f32
+        # operand convert of the attention dot into a whole-cache f32 copy
+        # (+7.5 GiB/device on qwen2-72b decode — EXPERIMENTS.md §Perf B2)
+        (x, li, K, V) = carry
+        p, _li = inp
+        k_cache = lax.dynamic_index_in_dim(K, li, 0, keepdims=False)
+        v_cache = lax.dynamic_index_in_dim(V, li, 0, keepdims=False)
+        h = apply_norm(cfg.norm, x, p.get("attn_norm"))
+        q, k_new, v_new = _project_qkv(p, cfg, h, positions)
+        # batched scatter writes only the touched (B, 1) rows — a where-
+        # select would write the full 32k cache every layer (measured: +1.7
+        # TB/step memory-roofline traffic, EXPERIMENTS.md §Perf B2); the f32
+        # scatter-upcast hazard is already defeated by carry-threading
+        idx = cache["len"][:, None]                              # (B, 1)
+        bidx = jnp.arange(b)[:, None]
+        k_cache = k_cache.at[bidx, idx].set(
+            k_new.astype(k_cache.dtype), unique_indices=True,
+            indices_are_sorted=True,
+        )
+        v_cache = v_cache.at[bidx, idx].set(
+            v_new.astype(v_cache.dtype), unique_indices=True,
+            indices_are_sorted=True,
+        )
+        attn = gqa_attention(
+            q, k_cache.astype(x.dtype), v_cache.astype(x.dtype),
+            causal=False, kv_len=cache["len"] + 1,
+        )
+        attn = attn.reshape(b, 1, cfg.n_heads, cfg.hd)
+        x = x + jnp.einsum("bshx,hxd->bsd", attn, p["wo"].astype(x.dtype))
+        hh = apply_norm(cfg.norm, x, p.get("mlp_norm"))
+        if cfg.moe:
+            out, _ = moe_ffn(
+                p["moe"], hh.reshape(-1, cfg.d_model), cfg.moe,
+                dp_spec=cfg.act("dp+sp", None),
+                ep_spec=cfg.act("tp", None, None),
+            )
+            x = x + out.reshape(x.shape)
+        else:
+            x = x + _mlp_block(p, cfg, hh)
+        K = lax.dynamic_update_index_in_dim(K, k_cache, li, 0)
+        V = lax.dynamic_update_index_in_dim(V, v_cache, li, 0)
+        return (constrain(x, cfg.act("dp", None, None)), li + 1, K, V), None
+
+    (x, _, ks, vs), _ = lax.scan(
+        body, (x, 0, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)),
+    )
+    x = apply_norm(
+        cfg.norm, x,
+        params["final_norm"] if cfg.norm == "rmsnorm" else None,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head.astype(x.dtype))
+    logits = constrain(logits, cfg.act("dp", "tp"))
+    new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+    return logits, new_cache

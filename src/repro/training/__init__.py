@@ -1,0 +1,7 @@
+from .optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compressed_psum,
+)
+from .train import TrainStepConfig, make_train_step

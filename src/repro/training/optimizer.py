@@ -1,0 +1,106 @@
+"""AdamW (built from scratch — no optax in this environment) plus the int8
+error-feedback gradient compression used on the slow inter-pod hop."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    # moment storage dtype; "bfloat16" halves optimizer memory (8-bit-Adam
+    # style trade, used for the 235B config at 256 chips) — update math is
+    # always fp32
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, mdt), params
+    )
+    return {
+        "m": zeros(),
+        "v": zeros(),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    if cfg.grad_clip is not None:
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd_one(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m / b1t
+        vh = v / b2t
+        new_p = p - cfg.lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        )
+        return new_p.astype(p.dtype), m.astype(mdt), v.astype(mdt)
+
+    # NOTE (§Perf, refuted): chunking this update over the layer axis via
+    # lax.map (+11 GiB: stacked ys defeat donation) or an in-place fori_loop
+    # (no change) does not reduce peak — XLA already fuses the elementwise
+    # chain; the measured f32 stacks were gradient-accumulation buffers.
+    upd = upd_one
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback (for shard_map DP loops)
+# ---------------------------------------------------------------------------
+
+
+def compressed_psum(g, axis_name: str, residual=None):
+    """All-reduce an int8-quantised gradient with a shared scale.
+
+    Returns (summed f32 gradient, new residual).  The residual (error
+    feedback) must be carried in the optimiser state and added to the next
+    step's local gradient; this keeps convergence within noise of fp32 DP
+    (1-bit Adam / EF-SGD literature).
+    """
+    if residual is not None:
+        g = g + residual
+    amax = lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_residual = g - q.astype(jnp.float32) * scale
+    total = lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+    return total * scale, new_residual

@@ -1,0 +1,62 @@
+"""Generic train-step factory: value_and_grad -> AdamW, with optional
+microbatch gradient accumulation (sequential scan)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .optimizer import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    accum_steps: int = 1
+
+
+def make_train_step(loss_fn: Callable, cfg: TrainStepConfig = TrainStepConfig()):
+    """loss_fn(params, batch) -> scalar loss.
+
+    Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+    With accum_steps > 1 the batch's leading axis is split into microbatches
+    and gradients accumulate in fp32 before one optimiser application.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state, batch):
+        if cfg.accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return (acc, loss_acc + loss), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(
+                    (cfg.accum_steps, x.shape[0] // cfg.accum_steps)
+                    + x.shape[1:]
+                ),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = lax.scan(micro, (zeros, 0.0), split)
+            grads = jax.tree.map(lambda g: g / cfg.accum_steps, grads)
+            loss = loss / cfg.accum_steps
+        params, opt_state = adamw_update(
+            grads, opt_state, params, cfg.optimizer
+        )
+        return params, opt_state, {"loss": loss}
+
+    return step

@@ -1,0 +1,27 @@
+import os
+import sys
+
+# smoke tests / benches must see exactly ONE device; the 512-device flag is
+# set only inside launch/dryrun.py (see system DESIGN.md).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__)))
+
+import numpy as np
+import pytest
+
+from repro.core import ANNConfig, make_dataset
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    data, queries = make_dataset(600, 24, "l2", n_queries=24, seed=7)
+    return data, queries
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    return ANNConfig(
+        dim=24, n_cap=700, r=12, l_build=32, l_search=32, l_delete=32,
+        k_delete=16, n_copies=3, alpha=1.2, metric="l2",
+    )

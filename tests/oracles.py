@@ -1,0 +1,87 @@
+"""Pure-numpy oracles for the core graph algorithms (test references)."""
+from __future__ import annotations
+
+import numpy as np
+
+INVALID = -1
+
+
+def dist(metric: str, a: np.ndarray, b: np.ndarray) -> float:
+    if metric == "l2":
+        d = a.astype(np.float32) - b.astype(np.float32)
+        return float(np.dot(d, d))
+    return float(-np.dot(a, b))
+
+
+def robust_prune_oracle(
+    metric: str,
+    alpha: float,
+    r: int,
+    p_vec: np.ndarray,
+    cand_ids: np.ndarray,
+    cand_vecs_all: np.ndarray,   # full slot table
+    live_mask: np.ndarray,       # navigable slots
+    p_id: int | None = None,
+) -> list[int]:
+    """Algorithm 3 with this codebase's candidate hygiene (dedupe keep-first,
+    drop dead slots / p itself), matching repro.core.prune.robust_prune."""
+    seen: set[int] = set()
+    ids: list[int] = []
+    for i in cand_ids:
+        i = int(i)
+        if i < 0 or i in seen:
+            continue
+        seen.add(i)
+        if p_id is not None and i == p_id:
+            continue
+        if not live_mask[i]:
+            continue
+        ids.append(i)
+    # distance-from-p, matmul form (norms + q2 - 2 dot) to match device math
+    def d_p(i):
+        if metric == "l2":
+            x = cand_vecs_all[i]
+            return (
+                float(np.dot(p_vec, p_vec))
+                + float(np.dot(x, x))
+                - 2.0 * float(np.dot(x, p_vec))
+            )
+        return float(-np.dot(cand_vecs_all[i], p_vec))
+
+    alive = {i: d_p(i) for i in ids}
+    out: list[int] = []
+    while alive and len(out) < r:
+        v = min(alive, key=lambda i: (alive[i], ids.index(i)))
+        dv = alive.pop(v)
+        if not np.isfinite(dv):
+            break
+        out.append(v)
+        vv = cand_vecs_all[v]
+        drop = []
+        for u, du in alive.items():
+            if metric == "l2":
+                x = cand_vecs_all[u]
+                duv = (
+                    float(np.dot(vv, vv))
+                    + float(np.dot(x, x))
+                    - 2.0 * float(np.dot(x, vv))
+                )
+            else:
+                duv = float(-np.dot(cand_vecs_all[u], vv))
+            if alpha * duv <= du:
+                drop.append(u)
+        for u in drop:
+            alive.pop(u)
+    return out
+
+
+def brute_topk_oracle(metric, queries, vecs, active, k):
+    out = []
+    for q in queries:
+        if metric == "l2":
+            d = ((vecs - q) ** 2).sum(1)
+        else:
+            d = -(vecs @ q)
+        d = np.where(active, d, np.inf)
+        out.append(np.argsort(d, kind="stable")[:k])
+    return np.stack(out)

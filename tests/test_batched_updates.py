@@ -1,0 +1,31 @@
+"""Batched update mode: invariants hold, recall matches serial mode."""
+import numpy as np
+
+from repro.core import ANNConfig, StreamingIndex, make_dataset
+from test_updates import CFG, check_invariants
+
+
+def test_batched_inserts_and_deletes_keep_invariants():
+    data, queries = make_dataset(150, CFG.dim, n_queries=8, seed=11)
+    idx = StreamingIndex(CFG, mode="ip", max_external_id=400,
+                         batch_updates=True)
+    idx.insert(np.arange(150), data)
+    check_invariants(idx)
+    idx.delete(np.arange(0, 150, 3))
+    check_invariants(idx)
+    idx.insert(np.arange(150, 200), data[:50])
+    check_invariants(idx)
+
+
+def test_batched_recall_close_to_serial():
+    data, queries = make_dataset(600, 24, n_queries=24, seed=12)
+    cfg = ANNConfig(dim=24, n_cap=700, r=12, l_build=32, l_search=32,
+                    l_delete=32, k_delete=16, n_copies=3)
+    recalls = {}
+    for batched in (False, True):
+        idx = StreamingIndex(cfg, max_external_id=700,
+                             batch_updates=batched)
+        idx.insert(np.arange(600), data)
+        idx.delete(np.arange(0, 200))
+        recalls[batched] = idx.recall(queries, k=10)
+    assert recalls[True] >= recalls[False] - 0.05, recalls

@@ -1,0 +1,118 @@
+"""Checkpoint atomicity + fault-tolerant restart semantics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_onto
+from repro.data import TokenStream
+from repro.ft import SimulatedFailure, Supervisor
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "b": {"c": jnp.arange(10, dtype=jnp.int32)},
+    }
+
+
+def test_save_load_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(5, t, extra={"note": "x"})
+    step, got, extra = mgr.load(like=t)
+    assert step == 5 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.latest() == 4
+    steps = sorted(mgr._complete_steps())
+    assert steps == [3, 4]
+
+
+def test_incomplete_checkpoint_is_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    # simulate a crash mid-write: tmp dir without manifest rename
+    broken = tmp_path / "step_00000002.tmp"
+    broken.mkdir()
+    (broken / "leaf_00000.npy").write_bytes(b"garbage")
+    assert mgr.latest() == 1
+
+
+def test_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    with pytest.raises(AssertionError):
+        mgr.load(like={"different": jnp.zeros(3)})
+
+
+def _make_train():
+    """Tiny deterministic training problem."""
+    stream = TokenStream(vocab=64, batch=4, seq=8, seed=3)
+    w0 = jnp.zeros((64, 64), jnp.float32)
+
+    @jax.jit
+    def step(w, tokens, labels):
+        x = jax.nn.one_hot(tokens, 64)
+        logits = x @ w
+        loss = jnp.mean(
+            (logits - jax.nn.one_hot(labels, 64)) ** 2
+        )
+        g = jax.grad(
+            lambda w: jnp.mean((x @ w - jax.nn.one_hot(labels, 64)) ** 2)
+        )(w)
+        return w - 0.1 * g
+
+    def step_fn(w, t):
+        b = stream.batch_at(t)
+        return step(w, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"]))
+
+    return w0, step_fn
+
+
+def test_supervisor_restart_is_bit_exact(tmp_path):
+    w0, step_fn = _make_train()
+    # uninterrupted reference
+    w_ref = w0
+    for t in range(25):
+        w_ref = step_fn(w_ref, t)
+    # supervised run with injected failures
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    sup = Supervisor(mgr, checkpoint_every=5)
+    w_got, info = sup.run(
+        w0, step_fn, 25, fail_at={7: 1, 13: 2, 24: 1},
+    )
+    assert info["restarts"] == 4
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_got))
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    w0, step_fn = _make_train()
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    sup = Supervisor(mgr, checkpoint_every=5, max_restarts=2)
+    with pytest.raises(SimulatedFailure):
+        sup.run(w0, step_fn, 10, fail_at={3: 99})
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """A checkpoint written under one sharding restores under another
+    (elastic rescale); exercised in-process via a subprocess with 8 devices
+    in tests/test_distributed.py — here we check the numpy path."""
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    _, tree_np, _ = mgr.load(like=t)
+    restored = restore_onto(tree_np)  # default placement
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,75 @@
+"""Algorithm 6 (light) and Algorithm 4 (fresh) consolidation semantics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ANNConfig,
+    StreamingIndex,
+    light_consolidate,
+    make_dataset,
+)
+
+
+CFG = ANNConfig(dim=12, n_cap=200, r=8, l_build=16, l_search=16, l_delete=16,
+                k_delete=10, n_copies=2, consolidation_threshold=10.0)
+# threshold=10 -> consolidation never auto-fires; tests call it explicitly
+
+
+def _build(n=150, mode="ip", seed=0):
+    data, queries = make_dataset(n, CFG.dim, n_queries=8, seed=seed)
+    idx = StreamingIndex(CFG, mode=mode, max_external_id=1000)
+    idx.insert(np.arange(n), data)
+    return idx, data, queries
+
+
+def test_light_consolidate_removes_dangling():
+    idx, data, queries = _build()
+    idx.delete(np.arange(0, 60))
+    quar = np.asarray(idx.state.quarantine)
+    assert quar.sum() == 60  # all awaiting Alg 6
+    adj = np.asarray(idx.state.adj)
+    dangling_before = quar[adj[adj >= 0]].sum()
+    idx.state = light_consolidate(idx.state, CFG)
+    adj = np.asarray(idx.state.adj)
+    quar = np.asarray(idx.state.quarantine)
+    assert quar.sum() == 0
+    assert int(idx.state.free_top) + int(idx.state.n_active) == CFG.n_cap
+    valid = adj[adj >= 0]
+    active = np.asarray(idx.state.active)
+    assert active[valid].all(), "dangling edges survived Algorithm 6"
+    # Alg 6 must do zero distance computations: pure mask+compact, so the
+    # vectors table is untouched (bitwise).
+    assert dangling_before >= 0
+
+
+def test_light_consolidate_is_distance_free():
+    """Alg 6 must not touch vectors/norms (no distance computations)."""
+    idx, *_ = _build()
+    before_v = np.asarray(idx.state.vectors).copy()
+    before_n = np.asarray(idx.state.norms).copy()
+    idx.delete(np.arange(0, 30))
+    st = light_consolidate(idx.state, CFG)
+    np.testing.assert_array_equal(np.asarray(st.vectors), before_v)
+    np.testing.assert_array_equal(np.asarray(st.norms), before_n)
+
+
+def test_slot_reuse_after_consolidation_is_safe():
+    idx, data, queries = _build()
+    r0 = idx.recall(queries, k=10)
+    idx.delete(np.arange(0, 60))
+    idx.maybe_consolidate(force=True)
+    # reuse the 60 freed slots
+    idx.insert(np.arange(150, 210), data[:60])
+    r1 = idx.recall(queries, k=10)
+    assert idx.n_active == 150
+    assert r1 >= r0 - 0.1, (r0, r1)
+
+
+def test_fresh_consolidate_restores_recall():
+    idx, data, queries = _build(mode="fresh")
+    idx.delete(np.arange(0, 60))
+    # force Alg 4
+    idx.maybe_consolidate(force=True)
+    assert not np.asarray(idx.state.tombstone).any()
+    r = idx.recall(queries, k=10)
+    assert r >= 0.9, r

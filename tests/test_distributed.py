@@ -1,0 +1,82 @@
+"""Sharded fan-out index over 8 placeholder devices (subprocess — the main
+test process must keep seeing exactly 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings; warnings.filterwarnings("ignore")
+    import jax, numpy as np
+    from repro.configs.ann import test_scale as ann_cfg
+    from repro.core.distributed import ShardedIndex
+    from repro.core import make_dataset
+
+    data, queries = make_dataset(800, 16, n_queries=16, seed=0)
+    mesh = jax.make_mesh((8,), ("shard",))
+    cfg = ann_cfg(16, n_cap=800)
+    idx = ShardedIndex(cfg, mesh)
+    ext = np.arange(800)
+    slots, owners = idx.insert(ext, data)
+    assert (slots >= 0).all(), "insert failed on some shard"
+
+    # recall vs exact brute force over the whole corpus
+    ids, shards, dists, comps = idx.search(queries, k=10, l=32)
+    slot_key = {(int(o), int(s)): int(e) for e, s, o in zip(ext, slots, owners)}
+    d = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
+    exact = np.argsort(d, axis=1)[:, :10]
+    hits = 0
+    for qi in range(len(queries)):
+        found = {slot_key.get((int(sh), int(sl)), -1)
+                 for sh, sl in zip(shards[qi], ids[qi])}
+        hits += len(found.intersection(exact[qi].tolist()))
+    recall = hits / (len(queries) * 10)
+    assert recall >= 0.9, f"sharded recall too low: {recall}"
+
+    # deletes are routed to the owning shard and disappear from results
+    drop = ext[:200]
+    idx.delete_slots(slots[:200], owners[:200])
+    ids2, shards2, _, _ = idx.search(queries, k=10, l=32)
+    for qi in range(len(queries)):
+        found = {slot_key.get((int(sh), int(sl)), -1)
+                 for sh, sl in zip(shards2[qi], ids2[qi])}
+        assert not found.intersection(set(drop.tolist()))
+    print("OK recall=%.3f comps=%d" % (recall, comps))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_index_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK recall=" in out.stdout
+
+
+def test_route_is_stable_and_balanced():
+    import numpy as np
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.distributed import ShardedIndex
+
+    route = ShardedIndex.route
+    class Fake:  # route only needs n_shards
+        n_shards = 8
+    ids = np.arange(10_000)
+    owners = route(Fake, ids)
+    again = route(Fake, ids)
+    np.testing.assert_array_equal(owners, again)
+    counts = np.bincount(owners, minlength=8)
+    assert counts.min() > 0.7 * counts.mean()

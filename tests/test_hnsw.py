@@ -1,0 +1,31 @@
+"""HNSW baseline: build recall, delete-replace path."""
+import numpy as np
+
+from repro.core.hnsw import HNSWConfig, HNSWIndex
+from repro.core import make_dataset
+
+
+def test_hnsw_build_and_recall():
+    data, queries = make_dataset(400, 16, n_queries=16, seed=0)
+    cfg = HNSWConfig(dim=16, n_cap=500, m=8, ef_construction=32, ef_search=32,
+                     max_level=3)
+    idx = HNSWIndex(cfg, max_external_id=600)
+    idx.insert(np.arange(400), data)
+    assert idx.n_active == 400
+    r = idx.recall(queries, k=10)
+    assert r >= 0.9, r
+
+
+def test_hnsw_delete_and_replace():
+    data, queries = make_dataset(300, 16, n_queries=8, seed=1)
+    cfg = HNSWConfig(dim=16, n_cap=280, m=8, ef_construction=32, ef_search=32,
+                     max_level=2, consolidation_threshold=0.2)
+    idx = HNSWIndex(cfg, max_external_id=600)
+    idx.insert(np.arange(200), data[:200])
+    idx.delete(np.arange(80))  # 40% deleted -> replacement kicks in
+    # inserting 80 more must reuse tombstoned slots (capacity is 280)
+    idx.insert(np.arange(200, 280), data[200:280])
+    assert idx.n_active == 200
+    assert int(np.asarray(idx.state.tombstone).sum()) < 80
+    r = idx.recall(queries, k=10)
+    assert r >= 0.85, r

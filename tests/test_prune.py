@@ -1,0 +1,103 @@
+"""RobustPrune vs numpy oracle + properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracles import robust_prune_oracle
+from repro.core import ANNConfig, init_state, robust_prune
+from repro.core.types import INVALID
+
+
+def _mk_state(cfg, vecs, active=None):
+    n = vecs.shape[0]
+    state = init_state(cfg)
+    active = np.ones(n, bool) if active is None else active
+    return state._replace(
+        vectors=state.vectors.at[:n].set(jnp.asarray(vecs)),
+        norms=state.norms.at[:n].set(jnp.asarray((vecs * vecs).sum(1))),
+        active=state.active.at[:n].set(jnp.asarray(active)),
+    )
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_prune_matches_oracle(metric, seed):
+    rng = np.random.default_rng(seed)
+    n, dim, r, c = 80, 16, 8, 40
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    if metric == "ip":
+        vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    cfg = ANNConfig(dim=dim, n_cap=n, r=r, metric=metric, alpha=1.2)
+    state = _mk_state(cfg, vecs)
+    p_vec = rng.normal(size=(dim,)).astype(np.float32)
+    if metric == "ip":
+        p_vec /= np.linalg.norm(p_vec)
+    cand = rng.integers(-1, n, size=(c,)).astype(np.int32)
+
+    got = np.asarray(robust_prune(state, cfg, jnp.asarray(p_vec), jnp.asarray(cand)))
+    got = [int(x) for x in got if x >= 0]
+    want = robust_prune_oracle(
+        metric, 1.2, r, p_vec, cand, vecs, np.ones(n, bool)
+    )
+    assert got == want
+
+
+def test_prune_respects_degree_and_dedup():
+    rng = np.random.default_rng(3)
+    n, dim, r = 64, 8, 6
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    cfg = ANNConfig(dim=dim, n_cap=n, r=r)
+    state = _mk_state(cfg, vecs)
+    cand = np.concatenate([np.arange(20), np.arange(20)]).astype(np.int32)
+    out = np.asarray(robust_prune(state, cfg, jnp.asarray(vecs[0]), jnp.asarray(cand), p_id=0))
+    valid = out[out >= 0]
+    assert len(valid) <= r
+    assert len(set(valid.tolist())) == len(valid)
+    assert 0 not in valid  # p excluded
+
+
+def test_prune_drops_dead_slots():
+    rng = np.random.default_rng(4)
+    n, dim, r = 32, 8, 8
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    active = np.ones(n, bool)
+    active[5:15] = False
+    cfg = ANNConfig(dim=dim, n_cap=n, r=r)
+    state = _mk_state(cfg, vecs, active)
+    cand = np.arange(n).astype(np.int32)
+    out = np.asarray(robust_prune(state, cfg, jnp.asarray(vecs[0]), jnp.asarray(cand), p_id=0))
+    valid = set(out[out >= 0].tolist())
+    assert not valid.intersection(range(5, 15))
+
+
+def test_alpha_one_keeps_fewer_or_equal_edges():
+    """alpha > 1 relaxes occlusion, so it must keep at least as many edges."""
+    rng = np.random.default_rng(5)
+    n, dim, r = 128, 12, 16
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    p = rng.normal(size=(dim,)).astype(np.float32)
+    cand = np.arange(n).astype(np.int32)
+    counts = {}
+    for alpha in (1.0, 1.2, 2.0):
+        cfg = ANNConfig(dim=dim, n_cap=n, r=r, alpha=alpha)
+        state = _mk_state(cfg, vecs)
+        out = np.asarray(robust_prune(state, cfg, jnp.asarray(p), jnp.asarray(cand)))
+        counts[alpha] = int((out >= 0).sum())
+    assert counts[1.0] <= counts[1.2] <= counts[2.0]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_prune_property_first_is_nearest(seed):
+    """The first retained edge is always the closest live candidate."""
+    rng = np.random.default_rng(seed)
+    n, dim, r = 40, 8, 8
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    cfg = ANNConfig(dim=dim, n_cap=n, r=r)
+    state = _mk_state(cfg, vecs)
+    p = rng.normal(size=(dim,)).astype(np.float32)
+    cand = rng.choice(n, size=20, replace=False).astype(np.int32)
+    out = np.asarray(robust_prune(state, cfg, jnp.asarray(p), jnp.asarray(cand)))
+    d = ((vecs[cand] - p) ** 2).sum(1)
+    assert out[0] == cand[np.argmin(d)]

@@ -1,0 +1,57 @@
+"""Recall stability over runbooks (the paper's §4 headline behaviour),
+at CPU-test scale."""
+import numpy as np
+import pytest
+
+from repro.core import ANNConfig, StreamingIndex, make_runbook, run_runbook
+
+
+def _cfg(n_cap, dim, metric="l2"):
+    return ANNConfig(dim=dim, n_cap=n_cap, r=16, l_build=32, l_search=32,
+                     l_delete=32, k_delete=16, n_copies=3, metric=metric)
+
+
+@pytest.mark.parametrize("mode", ["ip", "fresh"])
+def test_sliding_window_recall_stable(mode):
+    rb = make_runbook("sliding_window", n=1200, dim=24, t_max=24, seed=0)
+    cfg = _cfg(1400, 24)
+    idx = StreamingIndex(cfg, mode=mode, max_external_id=1300)
+    rep = run_runbook(idx, rb, k=10, eval_every=2)
+    assert rep.avg_recall >= 0.88, rep.summary()
+    # stability: recall in the steady-state window never collapses
+    steady = [m.recall for m in rep.steps if m.step >= rb.eval_from]
+    assert min(steady) >= rep.avg_recall - 0.12
+
+
+def test_expiration_time_recall_stable():
+    rb = make_runbook("expiration_time", n=1200, dim=24, t_max=20, seed=1)
+    cfg = _cfg(1400, 24)
+    idx = StreamingIndex(cfg, mode="ip", max_external_id=1300)
+    rep = run_runbook(idx, rb, k=10, eval_every=2)
+    assert rep.avg_recall >= 0.85, rep.summary()
+
+
+def test_clustered_runbook_ip_vs_fresh():
+    rb = make_runbook("clustered", n=1500, dim=24, n_clusters=8, rounds=2,
+                      seed=2)
+    reports = {}
+    for mode in ("ip", "fresh"):
+        cfg = _cfg(1700, 24)
+        idx = StreamingIndex(cfg, mode=mode, max_external_id=1600)
+        reports[mode] = run_runbook(idx, rb, k=10, eval_every=4)
+    # both maintain recall on the adversarial runbook; IP-DiskANN is the
+    # paper's winner but at toy scale we only assert parity-or-better - 5pts
+    assert reports["ip"].avg_recall >= 0.80, reports["ip"].summary()
+    assert reports["fresh"].avg_recall >= 0.80, reports["fresh"].summary()
+    assert (
+        reports["ip"].avg_recall >= reports["fresh"].avg_recall - 0.05
+    ), (reports["ip"].summary(), reports["fresh"].summary())
+
+
+def test_inner_product_runbook():
+    rb = make_runbook("sliding_window", n=1000, dim=32, t_max=16, seed=3,
+                      metric="ip")
+    cfg = _cfg(1200, 32, metric="ip")
+    idx = StreamingIndex(cfg, mode="ip", max_external_id=1100)
+    rep = run_runbook(idx, rb, k=10, eval_every=2)
+    assert rep.avg_recall >= 0.80, rep.summary()

@@ -1,0 +1,72 @@
+"""GreedySearch behaviour: recall vs brute force, tombstones, empty graph."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ANNConfig,
+    StreamingIndex,
+    brute_force_topk,
+    greedy_search,
+    init_state,
+    search_batch,
+)
+
+
+def _build(cfg, data, mode="ip"):
+    idx = StreamingIndex(cfg, mode=mode, max_external_id=len(data))
+    idx.insert(np.arange(len(data)), data)
+    return idx
+
+
+def test_search_recall_vs_bruteforce(small_cfg, small_data):
+    data, queries = small_data
+    idx = _build(small_cfg, data)
+    r = idx.recall(queries, k=10)
+    assert r >= 0.93, r
+
+
+def test_search_empty_graph(small_cfg):
+    state = init_state(small_cfg)
+    res = greedy_search(state, small_cfg, jnp.zeros(small_cfg.dim), k=5, l=16)
+    assert int(res.n_visited) == 0
+    assert np.all(np.asarray(res.topk_ids) == -1)
+
+
+def test_search_excludes_tombstones(small_cfg, small_data):
+    data, queries = small_data
+    idx = _build(small_cfg, data, mode="fresh")
+    # tombstone the true nearest neighbour of query 0 repeatedly
+    q = queries[:1]
+    for _ in range(5):
+        ext, _, _ = idx.search(q, k=1)
+        assert ext[0, 0] >= 0
+        idx.delete(ext[0, :1])
+        ext2, _, _ = idx.search(q, k=1)
+        assert ext2[0, 0] != ext[0, 0]
+
+
+def test_search_batch_matches_single(small_cfg, small_data):
+    data, queries = small_data
+    idx = _build(small_cfg, data)
+    res_b = search_batch(idx.state, small_cfg, jnp.asarray(queries[:4]), k=5, l=32)
+    for i in range(4):
+        res_1 = greedy_search(
+            idx.state, small_cfg, jnp.asarray(queries[i]), k=5, l=32
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res_b.topk_ids[i]), np.asarray(res_1.topk_ids)
+        )
+
+
+def test_visited_list_are_live_and_unique(small_cfg, small_data):
+    data, _ = small_data
+    idx = _build(small_cfg, data)
+    res = greedy_search(idx.state, small_cfg, jnp.asarray(data[0]), k=1,
+                        l=small_cfg.l_build)
+    n_vis = int(res.n_visited)
+    vis = np.asarray(res.visited_ids)[:n_vis]
+    assert n_vis > 0
+    assert np.all(vis >= 0)
+    assert len(set(vis.tolist())) == n_vis
+    active = np.asarray(idx.state.active)
+    assert active[vis].all()

@@ -1,0 +1,133 @@
+"""Insert/delete invariants, including hypothesis property sweeps."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ANNConfig, StreamingIndex, make_dataset
+from repro.core.types import INVALID
+
+
+CFG = ANNConfig(dim=12, n_cap=160, r=8, l_build=16, l_search=16, l_delete=16,
+                k_delete=10, n_copies=2, alpha=1.2)
+
+
+def check_invariants(idx: StreamingIndex):
+    st_ = idx.state
+    adj = np.asarray(st_.adj)
+    active = np.asarray(st_.active)
+    tomb = np.asarray(st_.tombstone)
+    quar = np.asarray(st_.quarantine)
+    free_top = int(st_.free_top)
+    n_active = int(st_.n_active)
+    n_pending = int(st_.n_pending)
+    n_cap = CFG.n_cap
+
+    # status masks are disjoint
+    assert not np.any(active & tomb)
+    assert not np.any(active & quar)
+    assert not np.any(tomb & quar)
+    # slot accounting
+    assert n_active == active.sum()
+    assert n_pending == (tomb | quar).sum()
+    assert free_top + n_active + n_pending == n_cap
+    # free-stack entries are exactly the unoccupied slots
+    free = np.asarray(st_.free_stack)[:free_top]
+    occupied = active | tomb | quar
+    assert len(set(free.tolist())) == free_top
+    assert not occupied[free].any()
+    # rows: no self loops, no duplicates, within bounds, only rows of
+    # occupied slots may be non-empty
+    for i in range(n_cap):
+        row = adj[i]
+        valid = row[row >= 0]
+        assert np.all(valid < n_cap)
+        if not occupied[i]:
+            assert len(valid) == 0, f"row {i} of free slot non-empty"
+            continue
+        assert len(valid) <= CFG.r
+        assert i not in valid
+        assert len(set(valid.tolist())) == len(valid)
+        # edges point at occupied slots (quarantined = dangling, allowed
+        # until consolidation; freed slots must never be referenced)
+        assert occupied[valid].all()
+    # front-compaction: no valid entry after an INVALID
+    first_invalid = np.argmax(adj < 0, axis=1)
+    has_invalid = (adj < 0).any(axis=1)
+    for i in range(n_cap):
+        if has_invalid[i]:
+            assert np.all(adj[i, first_invalid[i]:] < 0)
+    # entry point is navigable
+    start = int(st_.start)
+    if n_active + int(tomb.sum()) > 0:
+        assert start >= 0 and (active[start] or tomb[start])
+    else:
+        assert start == INVALID
+
+
+def test_insert_then_delete_all():
+    data, _ = make_dataset(100, CFG.dim, n_queries=4, seed=1)
+    idx = StreamingIndex(CFG, mode="ip", max_external_id=200)
+    idx.insert(np.arange(100), data)
+    check_invariants(idx)
+    idx.delete(np.arange(100))
+    check_invariants(idx)
+    assert idx.n_active == 0
+    # graph usable again afterwards
+    idx.insert(np.arange(100, 150), data[:50])
+    check_invariants(idx)
+    assert idx.n_active == 50
+    r = idx.recall(data[:8], k=1)
+    assert r >= 0.9
+
+
+def test_self_recall_after_churn():
+    """Every live vector should find itself as its own nearest neighbour."""
+    data, _ = make_dataset(120, CFG.dim, n_queries=4, seed=2)
+    idx = StreamingIndex(CFG, mode="ip", max_external_id=300)
+    idx.insert(np.arange(120), data)
+    idx.delete(np.arange(0, 120, 2))  # delete every other point
+    live = np.arange(1, 120, 2)
+    ext, _, _ = idx.search(data[live], k=1)
+    hit = (ext[:, 0] == live).mean()
+    assert hit >= 0.95, hit
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_random_op_sequences(seed):
+    rng = np.random.default_rng(seed)
+    data, _ = make_dataset(150, CFG.dim, n_queries=4, seed=seed % 17)
+    idx = StreamingIndex(CFG, mode="ip", max_external_id=10_000)
+    live: list = []
+    next_ext = 0
+    for _ in range(6):
+        if live and rng.uniform() < 0.45:
+            m = rng.integers(1, max(2, len(live) // 2))
+            sel = rng.choice(len(live), size=min(m, len(live)), replace=False)
+            dels = [live[i] for i in sel]
+            live = [e for j, e in enumerate(live) if j not in set(sel.tolist())]
+            idx.delete(np.asarray(dels))
+        else:
+            m = int(rng.integers(1, 20))
+            ids = np.arange(next_ext, next_ext + m)
+            rows = data[rng.integers(0, len(data), size=m)]
+            idx.insert(ids, rows)
+            live.extend(ids.tolist())
+            next_ext += m
+        check_invariants(idx)
+    assert idx.n_active == len(live)
+
+
+def test_fresh_mode_invariants_and_consolidation():
+    data, _ = make_dataset(120, CFG.dim, n_queries=4, seed=3)
+    idx = StreamingIndex(CFG, mode="fresh", max_external_id=300)
+    idx.insert(np.arange(120), data)
+    idx.delete(np.arange(40))  # 33% > threshold -> consolidation fires
+    assert idx.counters.n_consolidations >= 1
+    check_invariants(idx)
+    adj = np.asarray(idx.state.adj)
+    tomb = np.asarray(idx.state.tombstone)
+    assert not tomb.any()  # all tombstones consolidated away
+    valid = adj[adj >= 0]
+    active = np.asarray(idx.state.active)
+    assert active[valid].all()  # no edges into dead space after Alg 4
