@@ -10,12 +10,15 @@ import numpy as np
 from .common import Row, ann_params, scale, timed
 
 
-def run() -> List[Row]:
+def run(smoke: bool = False) -> List[Row]:
     from repro.core import StreamingIndex, make_dataset
 
-    n = scale(2400, 20_000)
-    dim = scale(48, 100)
-    data, queries = make_dataset(n, dim, n_queries=48, seed=7)
+    # --smoke: CI sanity sizes — proves the update/search/recall pipeline
+    # end-to-end in seconds, not a measurement
+    n = 512 if smoke else scale(2400, 20_000)
+    dim = 24 if smoke else scale(48, 100)
+    data, queries = make_dataset(n, dim, n_queries=16 if smoke else 48,
+                                 seed=7)
     rows: List[Row] = []
     results = {}
     for batched in (False, True):
@@ -54,5 +57,11 @@ def run() -> List[Row]:
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI sanity (not a measurement)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
         print(r.csv())

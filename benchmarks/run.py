@@ -17,6 +17,7 @@ MODULES = [
     "figure2_static_rebuild",
     "query_throughput",
     "perf_ann",
+    "backend_bench",
     "roofline",
 ]
 

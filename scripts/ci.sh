@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + smoke benchmarks + backend throughput trajectory.
+#
+#   scripts/ci.sh            fast gate (skips @slow subprocess tests)
+#   CI_FULL=1 scripts/ci.sh  include @slow tests too
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+marker='not slow'
+if [ "${CI_FULL:-0}" = "1" ]; then
+    marker=''
+fi
+
+echo "== tier-1 tests =="
+if [ -n "$marker" ]; then
+    python -m pytest -q -m "$marker"
+else
+    python -m pytest -q
+fi
+
+echo "== perf_ann smoke =="
+python -m benchmarks.perf_ann --smoke
+
+echo "== backend throughput (BENCH_backend.json) =="
+python -m benchmarks.backend_bench --out BENCH_backend.json
+cat BENCH_backend.json
+
+echo "CI OK"

@@ -1,31 +1,39 @@
-"""The paper's own index configurations (§4 Parameters)."""
+"""The paper's own index configurations (§4 Parameters).
+
+``backend`` selects the distance kernel engine (core/backend.py):
+``"auto"`` (default) rides the Pallas kernels on TPU and pure jnp off-TPU;
+``"jnp"`` / ``"pallas"`` / ``"ref"`` force a specific engine.
+"""
 from __future__ import annotations
 
 from ..core.types import ANNConfig
 
 
-def high_recall(dim: int, n_cap: int, metric: str = "l2") -> ANNConfig:
+def high_recall(dim: int, n_cap: int, metric: str = "l2",
+                backend: str = "auto") -> ANNConfig:
     """R=64, l_b = l_s = 128, alpha = 1.2 (paper's high-recall regime)."""
     return ANNConfig(
         dim=dim, n_cap=n_cap, r=64, l_build=128, l_search=128, l_delete=128,
         k_delete=50, n_copies=3, alpha=1.2, metric=metric,
-        consolidation_threshold=0.2,
+        consolidation_threshold=0.2, backend=backend,
     )
 
 
-def low_recall(dim: int, n_cap: int, metric: str = "l2") -> ANNConfig:
+def low_recall(dim: int, n_cap: int, metric: str = "l2",
+               backend: str = "auto") -> ANNConfig:
     """R=32, l_b = l_s = 64 (paper's resource-constrained regime)."""
     return ANNConfig(
         dim=dim, n_cap=n_cap, r=32, l_build=64, l_search=64, l_delete=64,
         k_delete=50, n_copies=3, alpha=1.2, metric=metric,
-        consolidation_threshold=0.2,
+        consolidation_threshold=0.2, backend=backend,
     )
 
 
-def test_scale(dim: int, n_cap: int, metric: str = "l2") -> ANNConfig:
+def test_scale(dim: int, n_cap: int, metric: str = "l2",
+               backend: str = "auto") -> ANNConfig:
     """Shrunk parameters for CPU-scale tests/benchmarks (same ratios)."""
     return ANNConfig(
         dim=dim, n_cap=n_cap, r=16, l_build=32, l_search=32, l_delete=32,
         k_delete=16, n_copies=3, alpha=1.2, metric=metric,
-        consolidation_threshold=0.2,
+        consolidation_threshold=0.2, backend=backend,
     )

@@ -1,5 +1,12 @@
 # The paper's primary contribution: IP-DiskANN — in-place updates of a
 # DiskANN proximity-graph index for streaming ANNS, as a JAX tensor program.
+from .backend import (
+    DistanceBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
 from .consolidate import fresh_consolidate, light_consolidate
 from .delete import ip_delete, ip_delete_many, lazy_delete, lazy_delete_many
 from .driver import RunbookReport, StepMetrics, run_runbook
@@ -13,8 +20,13 @@ from .types import INVALID, ANNConfig, GraphState, init_state
 
 __all__ = [
     "ANNConfig",
+    "DistanceBackend",
     "GraphState",
     "INVALID",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
     "Runbook",
     "RunbookReport",
     "RunbookStep",

@@ -14,6 +14,9 @@ is search-bound), so batching them converts the serial update stream into
 one wide SPMD program.  Recall impact is bounded by the batch size (same
 argument as the paper's multi-threaded execution) and measured in
 benchmarks/perf_ann.py.
+
+All distance math here (vmapped searches, top-c candidate matrices, prune)
+goes through the backend selected by ``cfg.backend`` (core/backend.py).
 """
 from __future__ import annotations
 

@@ -9,7 +9,8 @@ exactly the paper's "extremely lightweight" sweep.
 vertex with tombstoned out-neighbours, splice in the tombstones'
 out-neighbourhoods and RobustPrune.  Host-orchestrated (it is the *offline
 background* pass in the paper): affected rows are selected on host, then
-pruned in vmapped device chunks.
+pruned in vmapped device chunks.  The prune's distance math rides the
+kernel engine selected by ``cfg.backend`` (core/backend.py).
 """
 from __future__ import annotations
 

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .distance import BIG, pair_dists
+from .backend import BIG, resolve_backend
 from .edges import append_one, remove_target_rows
 from .search import greedy_search
 from .types import INVALID, ANNConfig, GraphState, clip_ids
@@ -39,17 +39,8 @@ class DeleteStats(NamedTuple):
 
 def _topc_candidates(state, cfg, src_ids, cand_ids, c):
     """For each source row, the c closest candidate ids (excluding itself)."""
-    ssrc = clip_ids(src_ids, cfg.n_cap)
-    scand = clip_ids(cand_ids, cfg.n_cap)
-    d = pair_dists(
-        cfg.metric,
-        state.vectors[ssrc],
-        state.norms[ssrc],
-        state.vectors[scand],
-        state.norms[scand],
-    )  # (S, K)
-    d = jnp.where((cand_ids[None, :] < 0), BIG, d)
-    d = jnp.where(cand_ids[None, :] == src_ids[:, None], BIG, d)
+    d = resolve_backend(cfg).pair_dists_ids(state, cfg, src_ids, cand_ids)
+    d = jnp.where(cand_ids[None, :] == src_ids[:, None], BIG, d)  # (S, K)
     _, idx = lax.top_k(-d, c)                      # (S, c)
     chosen = cand_ids[idx]
     finite = jnp.take_along_axis(d, idx, axis=1) < BIG

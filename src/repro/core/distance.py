@@ -1,4 +1,9 @@
-"""Distance computations — the hot loop of every graph-index operation.
+"""Raw jnp distance math — internal to the backend layer.
+
+Engine code must NOT import this module directly: go through
+``core.backend.resolve_backend(cfg)`` so the pluggable kernel engine
+(jnp / pallas / ref) stays the single dispatch seam.  Only
+``core/backend.py`` (and its tests) import these functions.
 
 Both metrics are expressed in "matmul + broadcast add" form so the same math
 is served by the pure-jnp path (CPU tests) and the Pallas ``gather_distance``
@@ -6,8 +11,8 @@ kernel (TPU target): for squared L2,
 
     d(q, x) = ||q||^2 + ||x||^2 - 2 <q, x>
 
-with ``||x||^2`` precomputed per slot.  Inner product uses d = -<q, x>
-(smaller = closer everywhere in this codebase).
+with ``||x||^2`` precomputed per slot (``GraphState.norms``).  Inner product
+uses d = -<q, x> (smaller = closer everywhere in this codebase).
 """
 from __future__ import annotations
 

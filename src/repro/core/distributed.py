@@ -16,6 +16,11 @@ pattern maps onto shard_map:
 Straggler mitigation for serving: ``search(..., backup=True)`` queries all
 shards anyway (fan-out IS the redundancy); at 1000-node scale the merge
 tolerates missing shards by masking their results (see ft/supervisor).
+
+Distance math inside every per-shard beam (and the per-shard update scans)
+rides the kernel engine selected by ``cfg.backend`` — the Pallas
+gather+distance kernel on TPU shards — because greedy_search/insert/delete
+all resolve the backend from the (static) config under ``shard_map``.
 """
 from __future__ import annotations
 

@@ -50,16 +50,26 @@ class StreamingIndex:
         mode: str = "ip",
         max_external_id: Optional[int] = None,
         batch_updates: bool = False,
+        backend: Optional[str] = None,
     ):
         """``batch_updates``: beyond-paper optimisation — run the search
-        phase of a batch of updates data-parallel (see core/batched.py)."""
+        phase of a batch of updates data-parallel (see core/batched.py).
+        ``backend``: override ``cfg.backend`` (the distance kernel engine;
+        see core/backend.py) without rebuilding the config by hand."""
         assert mode in ("ip", "fresh")
+        if backend is not None:
+            cfg = dataclasses.replace(cfg, backend=backend)
         self.cfg = cfg
         self.mode = mode
         self.batch_updates = batch_updates
         self.state: GraphState = init_state(cfg)
-        n_ext = max_external_id or cfg.n_cap * 4
-        self._ext2slot = np.full((n_ext,), INVALID, np.int64)
+        if max_external_id is None:
+            max_external_id = cfg.n_cap * 4
+        if max_external_id <= 0:
+            raise ValueError(
+                f"max_external_id must be positive, got {max_external_id}"
+            )
+        self._ext2slot = np.full((max_external_id,), INVALID, np.int64)
         self._slot2ext = np.full((cfg.n_cap,), INVALID, np.int64)
         self.counters = OpCounters()
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .distance import BIG, dists_from_rows
+from .backend import BIG, resolve_backend
 from .types import INVALID, ANNConfig, GraphState, clip_ids, mask_duplicates
 
 
@@ -45,10 +45,11 @@ def robust_prune(
                     ids, INVALID)
     safe = clip_ids(ids, cfg.n_cap)
 
+    be = resolve_backend(cfg)
     cand_vecs = state.vectors[safe]          # (C, D)
-    cand_norms = state.norms[safe]           # (C,)
-    p_norm = jnp.dot(p_vec, p_vec) if cfg.metric == "l2" else 0.0
-    d_p = dists_from_rows(cfg.metric, p_vec, p_norm, cand_vecs, cand_norms)
+    cand_norms = state.norms[safe]           # (C,)  cached per-slot norms
+    p_norm = be.query_norm(cfg, p_vec)
+    d_p = be.dists_from_rows(cfg, p_vec, p_norm, cand_vecs, cand_norms)
     if cand_dists is not None:
         d_p = jnp.where(jnp.isfinite(cand_dists), cand_dists, d_p)
     d_p = jnp.where(ids >= 0, d_p, BIG)
@@ -66,7 +67,7 @@ def robust_prune(
         # occlusion: drop u with alpha * d(u, v) <= d(u, p)
         v_vec = cand_vecs[j]
         v_norm = cand_norms[j]
-        d_v = dists_from_rows(cfg.metric, v_vec, v_norm, cand_vecs, cand_norms)
+        d_v = be.dists_from_rows(cfg, v_vec, v_norm, cand_vecs, cand_norms)
         keep = cfg.alpha * d_v > d_p
         alive = alive & jnp.where(ok, keep, True)
         alive = alive.at[j].set(False)

@@ -4,25 +4,20 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .distance import BIG, pair_dists
+from .backend import resolve_backend
 from .types import ANNConfig, GraphState
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def brute_force_topk(state: GraphState, cfg: ANNConfig, queries, *, k: int):
-    """Exact top-k over the live point set.  queries: (Q, D)."""
-    q_norms = (
-        jnp.sum(queries * queries, axis=1)
-        if cfg.metric == "l2"
-        else jnp.zeros((queries.shape[0],), jnp.float32)
-    )
-    d = pair_dists(cfg.metric, queries, q_norms, state.vectors, state.norms)
-    d = jnp.where(state.active[None, :], d, BIG)
-    neg, idx = jax.lax.top_k(-d, k)
-    return jnp.where(jnp.isfinite(neg), idx, -1), -neg
+    """Exact top-k over the live point set.  queries: (Q, D).
+
+    Delegates to the kernel engine selected by ``cfg.backend`` (the Pallas
+    streaming top-k scorer on TPU; one pair-distance matrix + top_k on jnp).
+    """
+    return resolve_backend(cfg).brute_force_topk(state, cfg, queries, k=k)
 
 
 def recall_at_k(found_ids, true_ids, k: int) -> float:

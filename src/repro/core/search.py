@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .distance import BIG, dists_to_ids
+from .backend import BIG, resolve_backend
 from .types import INVALID, ANNConfig, GraphState, clip_ids, navigable
 
 
@@ -63,10 +63,14 @@ def greedy_search(
     max_visits: Optional[int] = None,
     distance_fn: Optional[DistanceFn] = None,
 ) -> SearchResult:
-    """Beam search for the nearest neighbours of ``q`` (Algorithm 1)."""
+    """Beam search for the nearest neighbours of ``q`` (Algorithm 1).
+
+    Distance evaluation rides the kernel engine selected by
+    ``cfg.backend``; ``distance_fn`` overrides it for experiments.
+    """
     if max_visits is None:
         max_visits = cfg.max_visits(l)
-    dist_fn = distance_fn or dists_to_ids
+    dist_fn = distance_fn or resolve_backend(cfg).dists_to_ids
     nav = navigable(state)
     returnable = state.active
 

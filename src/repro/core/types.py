@@ -53,6 +53,9 @@ class ANNConfig:
     # ~l + a few dozen expansions.
     max_visit_slack: int = 64
     consolidation_threshold: float = 0.2
+    # Distance-backend selection (see core/backend.py): "auto" resolves to
+    # the Pallas kernels on TPU and pure jnp elsewhere.
+    backend: str = "auto"
 
     def max_visits(self, l: int) -> int:
         return l + self.max_visit_slack
@@ -60,6 +63,17 @@ class ANNConfig:
     def __post_init__(self):
         assert self.metric in ("l2", "ip"), self.metric
         assert self.r >= 1 and self.n_cap >= 1 and self.dim >= 1
+        if self.backend != "auto":
+            # validate against the live registry so custom engines added via
+            # register_backend are selectable (import deferred: backend.py
+            # imports this module at load time)
+            from .backend import available_backends
+
+            if self.backend not in available_backends():
+                raise ValueError(
+                    f"unknown backend {self.backend!r}; "
+                    f"known: {('auto',) + available_backends()}"
+                )
 
 
 # ---------------------------------------------------------------------------

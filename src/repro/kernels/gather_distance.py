@@ -28,9 +28,13 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUMemorySpace -> MemorySpace around 0.5; accept both
+_ANY = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+_ANY = _ANY.ANY
 
-def _kernel(metric: str, tile_k: int, d: int,
-            ids_ref, q_ref, vec_ref, out_ref, x_scratch, sem):
+
+def _kernel(metric: str, has_norms: bool, tile_k: int, d: int,
+            ids_ref, q_ref, n_ref, vec_ref, out_ref, x_scratch, sem):
     i = pl.program_id(0)
 
     def load_row(j, _):
@@ -48,7 +52,9 @@ def _kernel(metric: str, tile_k: int, d: int,
     prod = jnp.dot(x, q, preferred_element_type=jnp.float32)
     if metric == "l2":
         q2 = jnp.sum(q * q)
-        x2 = jnp.sum(x * x, axis=1)
+        # per-slot norms come precomputed from GraphState when available
+        # (one fewer VPU reduction per tile); recomputed in-kernel otherwise
+        x2 = n_ref[...] if has_norms else jnp.sum(x * x, axis=1)
         out_ref[...] = q2 + x2 - 2.0 * prod
     else:
         out_ref[...] = -prod
@@ -61,6 +67,7 @@ def gather_distance(
     ids: jax.Array,       # i32[K]  (INVALID = -1 entries allowed)
     query: jax.Array,     # f32[D]
     vectors: jax.Array,   # f32[N, D]  (HBM resident)
+    norms=None,           # optional f32[N] cached squared row norms (l2)
     *,
     metric: str = "l2",
     tile_k: int = 64,
@@ -71,13 +78,22 @@ def gather_distance(
     tile_k = min(tile_k, max(k, 1))
     pad = (-k) % tile_k
     ids_p = jnp.pad(ids, (0, pad), constant_values=-1)
+    has_norms = norms is not None and metric == "l2"
+    # the per-id norm gather is a [K] scalar gather (cheap; the kernel only
+    # avoids the *row* gather) — done here so the kernel reads a VMEM tile
+    row_norms = (
+        jnp.where(ids_p >= 0, norms[jnp.clip(ids_p, 0, n - 1)], 0.0)
+        if has_norms
+        else jnp.zeros((k + pad,), jnp.float32)
+    ).astype(jnp.float32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=((k + pad) // tile_k,),
         in_specs=[
             pl.BlockSpec((1, d), lambda i, ids: (0, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec((tile_k,), lambda i, ids: (i,)),
+            pl.BlockSpec(memory_space=_ANY),
         ],
         out_specs=pl.BlockSpec((tile_k,), lambda i, ids: (i,)),
         scratch_shapes=[
@@ -86,10 +102,10 @@ def gather_distance(
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, metric, tile_k, d),
+        functools.partial(_kernel, metric, has_norms, tile_k, d),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k + pad,), jnp.float32),
         interpret=interpret,
-    )(ids_p, query[None].astype(jnp.float32), vectors)
+    )(ids_p, query[None].astype(jnp.float32), row_norms, vectors)
     out = out[:k]
     return jnp.where(ids >= 0, out, jnp.inf)

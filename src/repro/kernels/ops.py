@@ -21,24 +21,30 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def gather_distances(ids, query, vectors, *, metric="l2", interpret=None):
+def gather_distances(ids, query, vectors, norms=None, *, metric="l2",
+                     interpret=None):
+    """Fused gather+distance.  ``norms``: optional cached squared row norms
+    (``GraphState.norms``) so the l2 path skips the in-kernel reduction."""
     if interpret is None:
         interpret = _default_interpret()
     return gather_distance(
-        ids, query, vectors, metric=metric, interpret=interpret
+        ids, query, vectors, norms, metric=metric, interpret=interpret
     )
 
 
-def topk_search(queries, vectors, norms=None, *, k, metric="l2",
+def topk_search(queries, vectors, norms=None, *, k, metric="l2", bias=None,
                 tile_n=1024, interpret=None):
     """Exact top-k scoring.  Pads the candidate table to the tile size with
     +inf-distance rows when needed (production tables should be pre-aligned
-    so the pad copy never happens on the hot path)."""
+    so the pad copy never happens on the hot path).  ``bias``: optional
+    f32[N] additive row bias; +inf excludes a row (dead-slot masking)."""
     if interpret is None:
         interpret = _default_interpret()
     n, d = vectors.shape
     if norms is None:
         norms = jnp.sum(vectors * vectors, axis=1)
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
     tile_n = min(tile_n, max(n, 1))
     pad = (-n) % tile_n
     if pad:
@@ -48,12 +54,15 @@ def topk_search(queries, vectors, norms=None, *, k, metric="l2",
         norms = jnp.concatenate(
             [norms, jnp.full((pad,), jnp.inf, norms.dtype)], axis=0
         )
+        bias = jnp.concatenate(
+            [bias, jnp.full((pad,), jnp.inf, jnp.float32)], axis=0
+        )
     dists, ids = topk_score(
-        queries, vectors, norms, k=k, metric=metric, tile_n=tile_n,
+        queries, vectors, norms, bias, k=k, metric=metric, tile_n=tile_n,
         interpret=interpret,
     )
-    # padded ip rows score 0; mask anything out of range
-    valid = ids < n
+    # biased/padded rows score +inf; mask anything out of range or non-finite
+    valid = (ids < n) & jnp.isfinite(dists)
     return (
         jnp.where(valid, dists, jnp.inf),
         jnp.where(valid, ids, -1),
@@ -61,11 +70,16 @@ def topk_search(queries, vectors, norms=None, *, k, metric="l2",
 
 
 def make_kernel_distance_fn(*, interpret=None):
-    """A drop-in ``distance_fn`` for ``repro.core.search.greedy_search``."""
+    """A drop-in ``distance_fn`` for ``repro.core.search.greedy_search``.
+
+    Legacy injection point — prefer ``ANNConfig(backend="pallas")``, which
+    routes every hot path (not just search) through the kernels.
+    """
 
     def distance_fn(state, cfg, q, ids):
         return gather_distances(
-            ids, q, state.vectors, metric=cfg.metric, interpret=interpret
+            ids, q, state.vectors, state.norms, metric=cfg.metric,
+            interpret=interpret,
         )
 
     return distance_fn

@@ -17,13 +17,17 @@ def gather_distance_ref(ids, query, vectors, *, metric: str = "l2"):
     return jnp.where(ids >= 0, d, jnp.inf)
 
 
-def topk_score_ref(queries, vectors, norms, *, k: int, metric: str = "l2"):
-    """(dists f32[B, k], ids i32[B, k]) ascending by distance."""
+def topk_score_ref(queries, vectors, norms, bias=None, *, k: int,
+                   metric: str = "l2"):
+    """(dists f32[B, k], ids i32[B, k]) ascending by distance.  ``bias``:
+    optional f32[N] additive row bias (+inf excludes the row)."""
     prod = queries @ vectors.T                       # (B, N)
     if metric == "l2":
         q2 = jnp.sum(queries * queries, axis=1)
         d = q2[:, None] + norms[None, :] - 2.0 * prod
     else:
         d = -prod
+    if bias is not None:
+        d = d + bias[None, :]
     neg, idx = jax.lax.top_k(-d, k)
     return -neg, idx.astype(jnp.int32)

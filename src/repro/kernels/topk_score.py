@@ -29,7 +29,7 @@ NEG = jnp.inf  # sentinel for evicted entries
 
 
 def _kernel(metric: str, k: int, tile_n: int, n_tiles: int,
-            q_ref, qn_ref, x_ref, xn_ref, vals_out, ids_out,
+            q_ref, qn_ref, x_ref, xn_ref, b_ref, vals_out, ids_out,
             run_vals, run_ids):
     i = pl.program_id(0)
 
@@ -45,6 +45,9 @@ def _kernel(metric: str, k: int, tile_n: int, n_tiles: int,
         scores = xn_ref[...][:, None] + qn_ref[...][None, :] - 2.0 * prod
     else:
         scores = -prod
+    # additive per-row bias: 0 for scorable rows, +inf to exclude a row from
+    # the top-k (dead/tombstoned slots) uniformly across both metrics
+    scores = scores + b_ref[...][:, None]
     tile_ids = i * tile_n + lax.broadcasted_iota(jnp.int32, scores.shape, 0)
 
     # early-out: skip the merge when nothing in this tile can enter the top-k
@@ -84,6 +87,7 @@ def topk_score(
     queries: jax.Array,    # f32[B, D]
     vectors: jax.Array,    # f32[N, D]
     norms: jax.Array,      # f32[N]   (squared row norms; ignored for ip)
+    bias=None,             # optional f32[N] additive row bias (+inf = mask)
     *,
     k: int,
     metric: str = "l2",
@@ -100,6 +104,8 @@ def topk_score(
     )
     n_tiles = n // tile_n
     q_norms = jnp.sum(queries * queries, axis=1)
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
 
     vals, ids = pl.pallas_call(
         functools.partial(_kernel, metric, k, tile_n, n_tiles),
@@ -108,6 +114,7 @@ def topk_score(
             pl.BlockSpec((b, d), lambda i: (0, 0)),
             pl.BlockSpec((b,), lambda i: (0,)),
             pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
             pl.BlockSpec((tile_n,), lambda i: (i,)),
         ],
         out_specs=[
@@ -123,5 +130,6 @@ def topk_score(
             pltpu.VMEM((k, b), jnp.int32),
         ],
         interpret=interpret,
-    )(queries.astype(jnp.float32), q_norms, vectors, norms)
+    )(queries.astype(jnp.float32), q_norms, vectors, norms,
+      bias.astype(jnp.float32))
     return vals.T, ids.T

@@ -1,0 +1,137 @@
+"""Backend parity matrix: jnp / pallas (interpret) / ref must agree.
+
+The unified distance-backend layer (core/backend.py) is only a valid
+refactor if every registered engine returns the same distances and drives
+the greedy beam to the same neighbours.  The matrix covers both metrics,
+INVALID-id masking, a non-128-multiple dim (the Pallas kernels must not
+assume lane-aligned tables in interpret mode), and dead-slot masking in the
+brute-force oracle.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ANNConfig,
+    StreamingIndex,
+    available_backends,
+    brute_force_topk,
+    get_backend,
+    make_dataset,
+    search_batch,
+)
+
+BACKENDS = ("jnp", "pallas", "ref")
+DIM = 20  # deliberately not a multiple of 128 (nor of 8)
+
+
+def _cfg(metric, backend="jnp"):
+    return ANNConfig(
+        dim=DIM, n_cap=256, r=8, l_build=16, l_search=16, l_delete=16,
+        k_delete=8, n_copies=2, alpha=1.2, metric=metric, backend=backend,
+    )
+
+
+def _built_index(metric):
+    data, queries = make_dataset(200, DIM, metric, n_queries=6, seed=3)
+    idx = StreamingIndex(_cfg(metric), max_external_id=400)
+    idx.insert(np.arange(200), data)
+    # leave some dead slots so masking paths are exercised
+    idx.delete(np.arange(0, 30))
+    return idx, data, queries
+
+
+def test_registry_contents():
+    assert set(BACKENDS) <= set(available_backends())
+    assert get_backend("auto").name in ("jnp", "pallas")
+    with pytest.raises(KeyError):
+        get_backend("no-such-engine")
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_dists_to_ids_parity(metric):
+    idx, data, _ = _built_index(metric)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(DIM,)).astype(np.float32))
+    # live ids, dead ids, INVALID padding, out-of-order duplicates
+    ids = jnp.asarray(
+        np.array([31, 199, -1, 40, 31, 5, -1, 77, 120, 63], np.int32)
+    )
+    ref = None
+    for name in BACKENDS:
+        cfg = _cfg(metric, name)
+        d = np.asarray(
+            get_backend(name).dists_to_ids(idx.state, cfg, q, ids)
+        )
+        assert np.all(np.isinf(d[np.asarray(ids) < 0])), name
+        assert np.all(np.isfinite(d[np.asarray(ids) >= 0])), name
+        if ref is None:
+            ref = d
+        else:
+            np.testing.assert_allclose(d, ref, rtol=2e-5, atol=2e-5,
+                                       err_msg=name)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_search_batch_topk_parity(metric):
+    idx, _, queries = _built_index(metric)
+    qs = jnp.asarray(queries)
+    results = {}
+    for name in BACKENDS:
+        res = search_batch(idx.state, _cfg(metric, name), qs, k=5, l=16)
+        results[name] = np.asarray(res.topk_ids)
+    np.testing.assert_array_equal(results["pallas"], results["jnp"])
+    np.testing.assert_array_equal(results["ref"], results["jnp"])
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_brute_force_topk_parity(metric):
+    idx, _, queries = _built_index(metric)
+    qs = jnp.asarray(queries)
+    out = {}
+    for name in BACKENDS:
+        ids, dists = brute_force_topk(idx.state, _cfg(metric, name), qs, k=10)
+        out[name] = (np.asarray(ids), np.asarray(dists))
+        # deleted slots must never surface
+        dead = ~np.asarray(idx.state.active)
+        returned = out[name][0]
+        assert not dead[returned[returned >= 0]].any(), name
+    for name in ("pallas", "ref"):
+        np.testing.assert_array_equal(out[name][0], out["jnp"][0],
+                                      err_msg=name)
+        np.testing.assert_allclose(out[name][1], out["jnp"][1], rtol=2e-5,
+                                   atol=2e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_backend_selected_index_end_to_end(metric):
+    """A StreamingIndex built entirely on the pallas backend matches jnp."""
+    data, queries = make_dataset(150, DIM, metric, n_queries=6, seed=9)
+    recalls = {}
+    for name in ("jnp", "pallas"):
+        idx = StreamingIndex(_cfg(metric), max_external_id=200, backend=name)
+        assert idx.cfg.backend == name
+        idx.insert(np.arange(150), data)
+        idx.delete(np.arange(0, 20))
+        recalls[name] = idx.recall(queries, k=5)
+    assert recalls["pallas"] == pytest.approx(recalls["jnp"], abs=1e-9), (
+        recalls
+    )
+
+
+def test_k_larger_than_live_pads_invalid():
+    """INVALID padding past the live count is identical across backends."""
+    data, _ = make_dataset(6, DIM, "l2", n_queries=1, seed=1)
+    for name in BACKENDS:
+        cfg = dataclasses.replace(_cfg("l2", name), n_cap=64)
+        idx = StreamingIndex(cfg, max_external_id=10)
+        idx.insert(np.arange(6), data)
+        ids, dists = brute_force_topk(
+            idx.state, cfg, jnp.asarray(data[:1]), k=10
+        )
+        ids = np.asarray(ids)[0]
+        assert (ids >= 0).sum() == 6, (name, ids)
+        assert np.all(ids[6:] == -1), (name, ids)
+        assert np.all(np.isinf(np.asarray(dists)[0, 6:])), name

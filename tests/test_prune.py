@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from oracles import robust_prune_oracle
 from repro.core import ANNConfig, init_state, robust_prune

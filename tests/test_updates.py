@@ -1,7 +1,7 @@
 """Insert/delete invariants, including hypothesis property sweeps."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import ANNConfig, StreamingIndex, make_dataset
 from repro.core.types import INVALID
