@@ -18,6 +18,7 @@ MODULES = [
     "query_throughput",
     "perf_ann",
     "backend_bench",
+    "search_bench",
     "roofline",
 ]
 

@@ -25,4 +25,9 @@ echo "== backend throughput (BENCH_backend.json) =="
 python -m benchmarks.backend_bench --out BENCH_backend.json
 cat BENCH_backend.json
 
+echo "== batched search engine (BENCH_search.json) =="
+# --smoke also enforces the non-regression gate: batched <= vmap at B >= 64
+python -m benchmarks.search_bench --smoke --out BENCH_search.json
+cat BENCH_search.json
+
 echo "CI OK"

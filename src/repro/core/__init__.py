@@ -13,9 +13,10 @@ from .driver import RunbookReport, StepMetrics, run_runbook
 from .index import StreamingIndex
 from .insert import insert, insert_many
 from .prune import robust_prune
-from .recall import brute_force_topk, recall_at_k
+from .recall import brute_force_topk, graph_recall, recall_at_k
 from .runbook import Runbook, RunbookStep, make_dataset, make_runbook
-from .search import SearchResult, greedy_search, search_batch
+from .search import SearchResult, greedy_search, search_batch, search_batch_vmap
+from .search_batched import batched_greedy_search, next_bucket, pad_batch
 from .types import INVALID, ANNConfig, GraphState, init_state
 
 __all__ = [
@@ -33,8 +34,10 @@ __all__ = [
     "SearchResult",
     "StepMetrics",
     "StreamingIndex",
+    "batched_greedy_search",
     "brute_force_topk",
     "fresh_consolidate",
+    "graph_recall",
     "greedy_search",
     "init_state",
     "insert",
@@ -46,8 +49,11 @@ __all__ = [
     "light_consolidate",
     "make_dataset",
     "make_runbook",
+    "next_bucket",
+    "pad_batch",
     "recall_at_k",
     "robust_prune",
     "run_runbook",
     "search_batch",
+    "search_batch_vmap",
 ]

@@ -74,6 +74,18 @@ class DistanceBackend:
         """f32[M] distances from ``q`` to slots ``ids``; inf where INVALID."""
         raise NotImplementedError
 
+    def dists_to_ids_batched(self, state: GraphState, cfg: ANNConfig,
+                             queries, ids):
+        """f32[B, M] distances from ``queries[b]`` to slots ``ids[b]``; inf
+        where INVALID.  One fused (B, M) gather-distance tile per call — the
+        per-hop primitive of the batched beam engine
+        (``core/search_batched.py``).  Default: vmap of the per-query
+        primitive, so every backend is batched-correct by construction;
+        engines with a natively batched kernel override it."""
+        return jax.vmap(
+            lambda q, row: self.dists_to_ids(state, cfg, q, row)
+        )(queries, ids)
+
     # -- gathered-tile math (prune / delete) --------------------------------
 
     def dists_from_rows(self, cfg: ANNConfig, q, q_norm, rows, row_norms):
@@ -210,6 +222,14 @@ class PallasBackend(JnpBackend):
             interpret=self.interpret,
         )
 
+    def dists_to_ids_batched(self, state, cfg, queries, ids):
+        from ..kernels import ops
+
+        return ops.gather_distances_batched(
+            ids, queries, state.vectors, norms=state.norms,
+            metric=cfg.metric, interpret=self.interpret,
+        )
+
     def brute_force_topk(self, state, cfg, queries, *, k):
         from ..kernels import ops
 
@@ -235,6 +255,9 @@ class RefBackend(JnpBackend):
         return ref.gather_distance_ref(
             ids, q, state.vectors, metric=cfg.metric
         )
+
+    # dists_to_ids_batched: the inherited vmap default IS the batched ref
+    # oracle (kernels/ref.gather_distance_batched_ref is the same vmap)
 
     def brute_force_topk(self, state, cfg, queries, *, k):
         from ..kernels import ref

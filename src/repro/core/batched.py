@@ -4,8 +4,10 @@ The paper's implementation overlaps updates across 16 CPU threads; in-flight
 updates don't observe each other's graph writes.  The TPU-native equivalent
 splits each update into a *search phase* and a *write phase*:
 
-  phase 1 — all B updates' greedy searches run data-parallel (vmap) against
-            the pre-batch graph (exactly the paper's relaxed visibility);
+  phase 1 — all B updates' greedy searches run through the natively batched
+            beam engine (core/search_batched.py: one shared hop loop, one
+            fused (B, R) gather-distance tile per hop) against the
+            pre-batch graph (exactly the paper's relaxed visibility);
   phase 2 — graph writes (prune + edge insertion) apply serially via scan,
             reusing the precomputed candidate lists.
 
@@ -15,13 +17,13 @@ one wide SPMD program.  Recall impact is bounded by the batch size (same
 argument as the paper's multi-threaded execution) and measured in
 benchmarks/perf_ann.py.
 
-All distance math here (vmapped searches, top-c candidate matrices, prune)
+All distance math here (batched searches, top-c candidate matrices, prune)
 goes through the backend selected by ``cfg.backend`` (core/backend.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,38 +33,48 @@ from .delete import DeleteStats, _next_start, _topc_candidates
 from .edges import append_one, remove_target_rows
 from .insert import InsertStats
 from .prune import robust_prune
-from .search import greedy_search
+from .search_batched import batched_greedy_search
 from .types import INVALID, ANNConfig, GraphState, clip_ids
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def insert_many_batched(state: GraphState, cfg: ANNConfig, xs: jax.Array):
-    """Batched inserts: vmapped searches, serial writes.  xs: (B, dim)."""
+def insert_many_batched(state: GraphState, cfg: ANNConfig, xs: jax.Array,
+                        valid: Optional[jax.Array] = None):
+    """Batched inserts: batched-engine searches, serial writes.  xs: (B, dim).
+
+    ``valid``: optional bool[B] lane mask — False lanes are no-ops (no slot
+    allocated, no write), letting ragged streaming batches ride a padded
+    power-of-two bucket (see ``StreamingIndex``) without recompiling.
+    """
     b = xs.shape[0]
+    if valid is None:
+        valid = jnp.ones((b,), bool)
 
     # phase 0: allocate slots and write vectors (so searches can't find them:
-    # slots stay inactive until phase 2 links them)
-    base = state.free_top - b
-    idxs = base + jnp.arange(b)
-    ok = idxs >= 0
+    # slots stay inactive until phase 2 links them).  Valid lanes take
+    # consecutive stack entries; when capacity runs short the earliest lanes
+    # lose out, matching the unmasked formulation.
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - valid.astype(jnp.int32)
+    idxs = state.free_top - n_valid + rank
+    ok = valid & (idxs >= 0)
     slots = jnp.where(ok, state.free_stack[jnp.maximum(idxs, 0)], INVALID)
     sslots = clip_ids(slots, cfg.n_cap)
     xs_f = xs.astype(state.vectors.dtype)
+    # failed/masked lanes must DROP their writes, not rewrite a stale copy:
+    # their clipped slot is 0, and if a valid lane was just allocated slot 0
+    # the duplicate-index scatter order would decide which write wins
+    write_idx = jnp.where(ok, sslots, cfg.n_cap)
     state = state._replace(
-        vectors=state.vectors.at[sslots].set(
-            jnp.where(ok[:, None], xs_f, state.vectors[sslots])
-        ),
-        norms=state.norms.at[sslots].set(
-            jnp.where(ok, jnp.sum(xs_f * xs_f, axis=1), state.norms[sslots])
+        vectors=state.vectors.at[write_idx].set(xs_f, mode="drop"),
+        norms=state.norms.at[write_idx].set(
+            jnp.sum(xs_f * xs_f, axis=1), mode="drop"
         ),
     )
 
-    # phase 1: batched searches against the pre-batch graph
-    def search_one(x):
-        res = greedy_search(state, cfg, x, k=1, l=cfg.l_build)
-        return res.visited_ids, res.visited_dists, res.n_comps
-
-    vis_ids, vis_dists, comps = jax.vmap(search_one)(xs_f)
+    # phase 1: one shared-hop-loop batched search against the pre-batch graph
+    res = batched_greedy_search(state, cfg, xs_f, k=1, l=cfg.l_build)
+    vis_ids, vis_dists, comps = res.visited_ids, res.visited_dists, res.n_comps
 
     # phase 2: serial link application
     def link(st: GraphState, args):
@@ -98,19 +110,19 @@ def insert_many_batched(state: GraphState, cfg: ANNConfig, xs: jax.Array):
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def ip_delete_many_batched(state: GraphState, cfg: ANNConfig, ps: jax.Array):
-    """Batched in-place deletes: vmapped searches, serial edge repair."""
+    """Batched in-place deletes: batched-engine searches, serial edge repair."""
     b = ps.shape[0]
     sps = clip_ids(ps, cfg.n_cap)
     valid = (ps >= 0) & state.active[sps]
 
-    def search_one(p):
-        x_p = state.vectors[clip_ids(p, cfg.n_cap)]
-        res = greedy_search(state, cfg, x_p, k=cfg.k_delete, l=cfg.l_delete)
-        vis = jnp.where(res.visited_ids == p, INVALID, res.visited_ids)
-        cands = jnp.where(res.topk_ids == p, INVALID, res.topk_ids)
-        return vis, cands, res.n_comps
-
-    vis_b, cands_b, comps_b = jax.vmap(search_one)(ps)
+    # phase 1: one shared-hop-loop batched search from every deleted point
+    x_ps = state.vectors[sps]
+    res = batched_greedy_search(state, cfg, x_ps, k=cfg.k_delete,
+                                l=cfg.l_delete)
+    vis_b = jnp.where(res.visited_ids == ps[:, None], INVALID,
+                      res.visited_ids)
+    cands_b = jnp.where(res.topk_ids == ps[:, None], INVALID, res.topk_ids)
+    comps_b = res.n_comps
 
     def repair(st: GraphState, args):
         p, vis, cands, ok = args

@@ -4,8 +4,10 @@ Each device along the flattened mesh owns an independent sub-index
 (GraphState stacked on a leading shard axis).  The classic distributed-ANNS
 pattern maps onto shard_map:
 
-  * search: the query fans out to every shard (replicated), each shard runs
-    its local greedy beam and returns its local top-k; a global top-k merge
+  * search: the query batch fans out to every shard (replicated); each shard
+    runs ONE natively batched beam over its local graph
+    (core/search_batched.py — a single shared hop loop for the whole batch,
+    not Q vmapped loops) and returns its local top-k; a global top-k merge
     over the all-gathered (k x S) candidates yields the answer.  One
     all-gather of k ids+dists per query — tiny versus the beam compute.
   * insert/delete: updates are routed to their owning shard by slot hash;
@@ -36,7 +38,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .delete import ip_delete
 from .insert import insert
-from .search import greedy_search
+from .search_batched import batched_greedy_search
 from .types import INVALID, ANNConfig, GraphState, init_state
 
 
@@ -69,11 +71,10 @@ class ShardedIndex:
             def shard_fn(state, q):
                 state = jax.tree.map(lambda x: x[0], state)  # unstack local
 
-                def one(qv):
-                    res = greedy_search(state, cfg, qv, k=k, l=l)
-                    return res.topk_ids, res.topk_dists, res.n_comps
-
-                ids, dists, comps = jax.vmap(one)(q)         # (Q, k) local
+                res = batched_greedy_search(state, cfg, q, k=k, l=l)
+                ids, dists, comps = (
+                    res.topk_ids, res.topk_dists, res.n_comps
+                )                                            # (Q, k) local
                 # global merge: gather every shard's top-k and re-select
                 all_ids = lax.all_gather(ids, axis)          # (S, Q, k)
                 all_d = lax.all_gather(dists, axis)

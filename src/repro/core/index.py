@@ -24,6 +24,7 @@ from .delete import ip_delete_many, lazy_delete_many
 from .insert import insert_many
 from .recall import brute_force_topk, recall_at_k
 from .search import search_batch
+from .search_batched import next_bucket, pad_batch
 from .types import INVALID, ANNConfig, GraphState, init_state
 
 
@@ -77,10 +78,19 @@ class StreamingIndex:
 
     def _apply_insert(self, ext_ids, vectors, batched: bool) -> None:
         xs = jnp.asarray(vectors, jnp.float32)
-        ins = insert_many_batched if batched else insert_many
-        self.state, stats = ins(self.state, self.cfg, xs)
-        slots = np.asarray(stats.slot)
-        self.counters.insert_comps += int(np.asarray(stats.n_comps).sum())
+        n = len(ext_ids)
+        if batched:
+            # pad ragged batches up to the power-of-two bucket with masked
+            # no-op lanes so every bucket size compiles exactly once
+            bucket = next_bucket(n)
+            valid = jnp.arange(bucket) < n
+            self.state, stats = insert_many_batched(
+                self.state, self.cfg, pad_batch(xs, n), valid
+            )
+        else:
+            self.state, stats = insert_many(self.state, self.cfg, xs)
+        slots = np.asarray(stats.slot)[:n]
+        self.counters.insert_comps += int(np.asarray(stats.n_comps)[:n].sum())
         if np.any(slots < 0):
             raise RuntimeError("index capacity exhausted")
         self._ext2slot[np.asarray(ext_ids)] = slots
@@ -114,9 +124,11 @@ class StreamingIndex:
                     while c * 2 <= min(na, 512):
                         c *= 2
                     take = min(c, n - i)
+                    # ragged tails ride the bucket-padded batched path (no-op
+                    # lanes) instead of falling back to the serial scan
                     self._apply_insert(
                         ext_ids[i : i + take], vectors[i : i + take],
-                        batched=(take == c),
+                        batched=True,
                     )
                 i += take
         self.counters.insert_s += time.perf_counter() - t0
@@ -127,9 +139,9 @@ class StreamingIndex:
         slots = self._ext2slot[np.asarray(ext_ids)]
         if np.any(slots < 0):
             raise KeyError("delete of unknown external id")
-        # pad to the next power of two with INVALID (a no-op delete): keeps
-        # the number of distinct compiled scan lengths logarithmic
-        pad = 1 << max(0, int(np.ceil(np.log2(max(len(slots), 1)))))
+        # pad to the next power-of-two bucket with INVALID (a no-op delete):
+        # keeps the number of distinct compiled batch shapes logarithmic
+        pad = next_bucket(len(slots))
         ps = jnp.asarray(
             np.concatenate([slots, np.full(pad - len(slots), -1)]), jnp.int32
         )

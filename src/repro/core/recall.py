@@ -1,7 +1,14 @@
-"""Ground truth + Recall@k (Definition 2.1)."""
+"""Ground truth + Recall@k (Definition 2.1).
+
+Both sides of the recall measurement ride batched engines: the ground truth
+is the backend's exact scan (``brute_force_topk``) and the approximate side
+is the natively batched graph search (``graph_recall`` →
+``core/search_batched.py``), so evaluating Q queries costs one program each.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import numpy as np
@@ -18,6 +25,21 @@ def brute_force_topk(state: GraphState, cfg: ANNConfig, queries, *, k: int):
     streaming top-k scorer on TPU; one pair-distance matrix + top_k on jnp).
     """
     return resolve_backend(cfg).brute_force_topk(state, cfg, queries, k=k)
+
+
+def graph_recall(state: GraphState, cfg: ANNConfig, queries, *, k: int,
+                 l: Optional[int] = None) -> float:
+    """Recall@k of the batched graph search against the exact oracle.
+
+    Runs the whole query set through one shared-hop-loop beam search and one
+    brute-force scan — the state-level counterpart of
+    ``StreamingIndex.recall`` (which also tracks op counters).
+    """
+    from .search import search_batch
+
+    res = search_batch(state, cfg, queries, k=k, l=l or cfg.l_search)
+    true_ids, _ = brute_force_topk(state, cfg, queries, k=k)
+    return recall_at_k(res.topk_ids, true_ids, k)
 
 
 def recall_at_k(found_ids, true_ids, k: int) -> float:

@@ -113,9 +113,13 @@ def greedy_search(
         beam_exp = s.beam_exp.at[i].set(True)
 
         # --- record in visited list (only live/returnable vertices) ---------
+        # The write is conditional on returnability: a tombstoned pop must not
+        # transiently occupy the slot a later live pop will claim (an
+        # out-of-bounds index drops the write entirely).
         v_ret = returnable[clip_ids(v, cfg.n_cap)]
-        vis_ids = s.vis_ids.at[s.n_vis].set(v)
-        vis_dists = s.vis_dists.at[s.n_vis].set(dv)
+        slot = jnp.where(v_ret, s.n_vis, jnp.int32(max_visits))
+        vis_ids = s.vis_ids.at[slot].set(v, mode="drop")
+        vis_dists = s.vis_dists.at[slot].set(dv, mode="drop")
         n_vis = s.n_vis + v_ret.astype(jnp.int32)
 
         # --- expand ----------------------------------------------------------
@@ -173,7 +177,7 @@ def se_key(e: jax.Array) -> jax.Array:
     return e.astype(jnp.int32)
 
 
-def search_batch(
+def search_batch_vmap(
     state: GraphState,
     cfg: ANNConfig,
     queries: jax.Array,
@@ -182,8 +186,65 @@ def search_batch(
     l: int,
     distance_fn: Optional[DistanceFn] = None,
 ) -> SearchResult:
-    """vmapped greedy search over a (B, dim) query batch."""
+    """vmapped greedy search over a (B, dim) query batch.
+
+    The pre-batched-engine formulation, kept as the benchmark baseline
+    (``benchmarks/search_bench.py``): XLA batches the per-query while_loop
+    by select-masking the whole carry every hop, which the native engine
+    (``core/search_batched.py``) avoids.
+    """
     fn = functools.partial(
         greedy_search, state, cfg, k=k, l=l, distance_fn=distance_fn
     )
     return jax.vmap(fn)(queries)
+
+
+@functools.lru_cache(maxsize=32)
+def _lift_distance_fn(distance_fn: DistanceFn):
+    """Lift a per-query distance_fn to the batched signature, cached so the
+    wrapper stays a stable (hashable) static jit argument across calls.
+    Callers must pass a stable function object (as with ``greedy_search``'s
+    static ``distance_fn``) — a fresh closure per call defeats both this
+    cache and the jit cache behind it; the bounded size caps the damage."""
+
+    def batched_fn(state, cfg, queries, ids):
+        return jax.vmap(
+            lambda q, row: distance_fn(state, cfg, q, row)
+        )(queries, ids)
+
+    return batched_fn
+
+
+def search_batch(
+    state: GraphState,
+    cfg: ANNConfig,
+    queries: jax.Array,
+    *,
+    k: int,
+    l: int,
+    distance_fn: Optional[DistanceFn] = None,
+    bucket: bool = True,
+) -> SearchResult:
+    """Batched greedy search over a (B, dim) query batch.
+
+    Runs the natively batched beam engine (one shared hop loop, fused
+    (B, R) gather-distance tiles); per lane the traversal (neighbour ids
+    and counters) is identical to ``greedy_search``, distances to f32
+    tolerance.  ``bucket`` pads ragged batch sizes up to the next
+    power of two so streaming callers stop paying a jit recompile per
+    distinct B (padded lanes run a zero query and are sliced off).
+    ``distance_fn`` keeps the legacy per-query signature and is lifted with
+    ``jax.vmap``; pass it to ``batched_greedy_search`` directly for a
+    natively batched override.
+    """
+    from .search_batched import batched_greedy_search, pad_batch
+
+    b = queries.shape[0]
+    batched_fn = _lift_distance_fn(distance_fn) if distance_fn else None
+    qs = pad_batch(queries, b) if bucket else queries
+    res = batched_greedy_search(
+        state, cfg, qs, k=k, l=l, distance_fn=batched_fn
+    )
+    if qs.shape[0] != b:
+        res = jax.tree.map(lambda x: x[:b], res)
+    return res

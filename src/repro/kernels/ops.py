@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .gather_distance import gather_distance
+from .gather_distance import gather_distance, gather_distance_batched
 from .topk_score import topk_score
 from . import ref
 
@@ -29,6 +29,17 @@ def gather_distances(ids, query, vectors, norms=None, *, metric="l2",
         interpret = _default_interpret()
     return gather_distance(
         ids, query, vectors, norms, metric=metric, interpret=interpret
+    )
+
+
+def gather_distances_batched(ids, queries, vectors, norms=None, *,
+                             metric="l2", interpret=None):
+    """Fused gather+distance over a (B, K) id tile — one 2-D-grid kernel
+    launch per beam hop (the batched engine's ``dists_to_ids_batched``)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return gather_distance_batched(
+        ids, queries, vectors, norms, metric=metric, interpret=interpret
     )
 
 
@@ -87,6 +98,7 @@ def make_kernel_distance_fn(*, interpret=None):
 
 __all__ = [
     "gather_distances",
+    "gather_distances_batched",
     "topk_search",
     "make_kernel_distance_fn",
     "ref",

@@ -17,6 +17,14 @@ def gather_distance_ref(ids, query, vectors, *, metric: str = "l2"):
     return jnp.where(ids >= 0, d, jnp.inf)
 
 
+def gather_distance_batched_ref(ids, queries, vectors, *, metric: str = "l2"):
+    """f32[B, K] distances from queries[b] to vectors[ids[b]]; +inf where
+    ids < 0.  vmap of the per-query oracle so per-lane math is identical."""
+    return jax.vmap(
+        lambda q, row: gather_distance_ref(row, q, vectors, metric=metric)
+    )(queries, ids)
+
+
 def topk_score_ref(queries, vectors, norms, bias=None, *, k: int,
                    metric: str = "l2"):
     """(dists f32[B, k], ids i32[B, k]) ascending by distance.  ``bias``:

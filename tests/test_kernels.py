@@ -6,7 +6,11 @@ import pytest
 from hyp_compat import given, settings, st
 
 from repro.kernels import ops
-from repro.kernels.ref import gather_distance_ref, topk_score_ref
+from repro.kernels.ref import (
+    gather_distance_batched_ref,
+    gather_distance_ref,
+    topk_score_ref,
+)
 
 
 def _data(n, d, seed=0):
@@ -25,6 +29,36 @@ def test_gather_distance_matches_ref(metric, n, d, k):
     want = gather_distance_ref(ids, q, vecs, metric=metric)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("n,d,b,k", [(64, 16, 3, 8), (200, 100, 5, 33),
+                                     (128, 128, 1, 128)])
+def test_gather_distance_batched_matches_ref(metric, n, d, b, k):
+    """The 2-D-grid kernel equals the oracle and the per-lane 1-D kernel."""
+    rng = np.random.default_rng(4)
+    vecs = jnp.asarray(_data(n, d))
+    qs = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, n, size=(b, k)).astype(np.int32))
+    norms = jnp.sum(vecs * vecs, axis=1)
+    got = ops.gather_distances_batched(ids, qs, vecs, norms, metric=metric,
+                                       interpret=True)
+    want = gather_distance_batched_ref(ids, qs, vecs, metric=metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=1e-5)
+    for lane in range(b):
+        lane_1d = ops.gather_distances(ids[lane], qs[lane], vecs, norms,
+                                       metric=metric, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[lane]),
+                                      np.asarray(lane_1d))
+
+
+def test_gather_distance_batched_all_invalid():
+    vecs = jnp.asarray(_data(32, 8))
+    ids = jnp.full((4, 16), -1, jnp.int32)
+    got = ops.gather_distances_batched(ids, jnp.zeros((4, 8)), vecs,
+                                       interpret=True)
+    assert np.all(np.isinf(np.asarray(got)))
 
 
 def test_gather_distance_all_invalid():

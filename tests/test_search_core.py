@@ -58,6 +58,35 @@ def test_search_batch_matches_single(small_cfg, small_data):
         )
 
 
+def test_visited_list_clean_after_midstream_deletes(small_cfg, small_data):
+    """Tombstoned pops must never write a visited slot, even transiently.
+
+    Regression: vis_ids/vis_dists used to be written at n_vis before the
+    returnability check, so a dead pop left its id in the slot until (unless)
+    a later live pop reclaimed it — visited_ids[n_visited:] could leak
+    tombstoned vertices into robust_prune's candidate lists.
+    """
+    data, queries = small_data
+    idx = _build(small_cfg, data, mode="fresh")
+    q = jnp.asarray(queries[0])
+    # tombstone the query's closest neighbours so the search pops dead
+    # vertices early and keeps navigating through them
+    ext, _, _ = idx.search(queries[:1], k=8)
+    idx.delete(ext[0])
+    assert int(idx.state.n_pending) == 8
+    res = greedy_search(idx.state, small_cfg, q, k=5, l=small_cfg.l_search)
+    n_vis = int(res.n_visited)
+    vis = np.asarray(res.visited_ids)
+    dead = np.asarray(idx.state.tombstone)
+    active = np.asarray(idx.state.active)
+    assert n_vis > 0
+    assert active[vis[:n_vis]].all(), "visited prefix must be live"
+    assert np.all(vis[n_vis:] == -1), (
+        "slots past n_visited must stay INVALID (no transient dead writes)"
+    )
+    assert not dead[vis[vis >= 0]].any()
+
+
 def test_visited_list_are_live_and_unique(small_cfg, small_data):
     data, _ = small_data
     idx = _build(small_cfg, data)
