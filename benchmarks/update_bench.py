@@ -1,0 +1,213 @@
+"""Mixed update stream: the unified ``apply`` front door vs the old
+two-dispatch path.
+
+Before the api redesign every runbook step paid two device programs plus a
+host numpy round-trip between them: ``insert_many_batched`` -> sync slots
+to host -> update the host id maps -> look up delete slots -> dispatch
+``ip_delete_many_batched``.  The unified ``apply(state, cfg, UpdateBatch)``
+runs the same mixed batch as ONE compiled program with the id map resolved
+and updated on device.
+
+Measures a 50/50 insert+delete stream at B in {64, 256}:
+
+  * ``two_dispatch`` — the faithful old decomposition (two jitted calls,
+    host sync of the insert slots, numpy id-map writes, host slot lookup);
+  * ``unified``      — one ``apply`` call on the interleaved batch.
+
+The final graphs are asserted identical before timing (the redesign is a
+dispatch-structure change, not a semantics change).  The graph is
+synthesized (random R-regular over the live prefix) exactly as
+benchmarks/search_bench.py does — update cost is search-bound, and a real
+Vamana build at bench scale would dominate CI wall time.
+
+Timing is min-over-repeats of one blocked call (1-core CPU box).  Writes
+``BENCH_update.json``; in --smoke mode a non-regression gate requires the
+unified path to be no slower than the two-dispatch path on the TOTAL
+across the measured batch sizes, with 10% slack (per-B wall times on the
+1-core box swing more than the dispatch saving itself).
+
+Usage: python -m benchmarks.update_bench [--smoke] [--out BENCH_update.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+from .common import Row, scale
+
+
+def _make_istate(n: int, dim: int, r: int, n_free: int, seed: int = 0):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ANNConfig, init_index_state
+    from repro.core.types import INVALID
+
+    rng = np.random.default_rng(seed)
+    n_live = n - n_free
+    data = rng.normal(size=(n, dim)).astype(np.float32)
+    adj = rng.integers(0, n_live, size=(n, r)).astype(np.int32)
+    adj[n_live:] = INVALID
+    active = np.zeros((n,), bool)
+    active[:n_live] = True
+    # free stack: the tail slots, top of stack first
+    free_stack = np.zeros((n,), np.int32)
+    free_stack[:n_free] = np.arange(n - 1, n_live - 1, -1)
+    ext2slot = np.full((n * 2,), INVALID, np.int32)
+    ext2slot[:n_live] = np.arange(n_live)
+    slot2ext = np.full((n,), INVALID, np.int32)
+    slot2ext[:n_live] = np.arange(n_live)
+
+    cfg = ANNConfig(dim=dim, n_cap=n, r=r, l_build=32, l_search=32,
+                    l_delete=32, k_delete=16, n_copies=2)
+    st = init_index_state(cfg, n * 2)
+    st = st._replace(
+        graph=st.graph._replace(
+            vectors=jnp.asarray(data),
+            norms=jnp.sum(jnp.asarray(data) ** 2, axis=1),
+            adj=jnp.asarray(adj),
+            active=jnp.asarray(active),
+            free_stack=jnp.asarray(free_stack),
+            free_top=jnp.int32(n_free),
+            start=jnp.int32(0),
+            n_active=jnp.int32(n_live),
+        ),
+        ext2slot=jnp.asarray(ext2slot),
+        slot2ext=jnp.asarray(slot2ext),
+    )
+    return cfg, st, rng, n_live
+
+
+def _bench(fn, repeat: int) -> float:
+    fn()  # compile + warm
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_bench(n: int, dim: int, r: int, batches, repeat: int = 3) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import apply, mixed_update_batch
+    from repro.core.batched import insert_many_batched, ip_delete_many_batched
+    from repro.core.types import INVALID
+
+    max_b = max(batches)
+    cfg, istate, rng, n_live = _make_istate(n, dim, r, n_free=max_b, seed=0)
+    report = {
+        "n": n, "dim": dim, "r": r, "repeat": repeat,
+        "note": "50/50 insert+delete stream; random R-regular live prefix; "
+                "min-of-repeats wall time; CPU/interpret numbers off-TPU",
+        "batch": {},
+    }
+    for b in batches:
+        half = b // 2
+        ins_ext = np.arange(n_live, n_live + half)
+        del_ext = rng.choice(n_live, size=half, replace=False).astype(np.int64)
+        xs = rng.normal(size=(half, dim)).astype(np.float32)
+
+        # kind-major mixed batch: the static split lets each internal phase
+        # of apply run only over its own lane range
+        batch, split = mixed_update_batch(ins_ext, xs, del_ext, dim)
+
+        xs_j = jnp.asarray(xs)
+        valid = jnp.ones((half,), bool)
+        del_slots_np = np.asarray(
+            np.asarray(istate.ext2slot)[del_ext], np.int32
+        )
+
+        def two_dispatch():
+            # dispatch 1: batched inserts
+            g, stats = insert_many_batched(istate.graph, cfg, xs_j, valid)
+            slots = np.asarray(stats.slot)          # host round-trip (sync)
+            # host id-map bookkeeping, as the old StreamingIndex did
+            e2s = np.full((n * 2,), INVALID, np.int64)
+            e2s[ins_ext] = slots
+            ps = jnp.asarray(del_slots_np)          # host slot lookup
+            # dispatch 2: batched in-place deletes
+            g, _ = ip_delete_many_batched(g, cfg, ps)
+            e2s[del_ext] = INVALID
+            jax.block_until_ready(g.adj)
+            return g
+
+        def unified():
+            st, _ = apply(istate, cfg, batch, policy="ip", sequential=False,
+                          split=split)
+            jax.block_until_ready(st.graph.adj)
+            return st
+
+        # semantics parity is a precondition for the timing to mean anything
+        g_old = two_dispatch()
+        st_new = unified()
+        for a, c in zip(jax.tree.leaves(g_old), jax.tree.leaves(st_new.graph)):
+            assert np.array_equal(np.asarray(a), np.asarray(c)), (
+                f"two-dispatch / unified graphs diverged at B={b}"
+            )
+
+        t_old = _bench(two_dispatch, repeat)
+        t_new = _bench(unified, repeat)
+        report["batch"][str(b)] = {
+            "two_dispatch_ms": t_old * 1e3,
+            "unified_ms": t_new * 1e3,
+            "speedup_unified_over_two_dispatch": t_old / t_new,
+            "unified_updates_per_s": b / t_new,
+        }
+    return report
+
+
+def run(out_path: str = "BENCH_update.json", smoke: bool = False) -> List[Row]:
+    if smoke:
+        n, dim, r = 4096, 32, 16
+        batches = (64, 256)
+        repeat = 5
+    else:
+        n = scale(4096, 16_384)
+        dim = scale(32, 64)
+        r = scale(16, 32)
+        batches = (64, 256)
+        repeat = scale(3, 5)
+    report = run_bench(n, dim, r, batches, repeat=repeat)
+    report["smoke"] = smoke
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows: List[Row] = []
+    for b, stats in report["batch"].items():
+        rows.append(Row(
+            f"update_bench.B{b}",
+            stats["unified_ms"] * 1e3,
+            f"speedup_over_two_dispatch="
+            f"{stats['speedup_unified_over_two_dispatch']:.2f};"
+            f"updates_per_s={stats['unified_updates_per_s']:.0f}",
+        ))
+    rows.append(Row("update_bench.report", 0.0, f"written={out_path}"))
+
+    if smoke:
+        # non-regression gate: one fused program must not lose to the
+        # two-dispatch + host-round-trip path it replaced.  Gated on the
+        # total across batch sizes with 10% slack — single-B wall times on
+        # the 1-core CI box swing more than the dispatch saving itself.
+        t_new = sum(s["unified_ms"] for s in report["batch"].values())
+        t_old = sum(s["two_dispatch_ms"] for s in report["batch"].values())
+        assert t_new <= t_old * 1.10, (
+            f"unified apply regressed: {t_new:.1f} ms total vs two-dispatch "
+            f"{t_old:.1f} ms over B={list(report['batch'])}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + the unified<=two-dispatch gate")
+    ap.add_argument("--out", default="BENCH_update.json")
+    args = ap.parse_args()
+    for row in run(out_path=args.out, smoke=args.smoke):
+        print(row.csv())

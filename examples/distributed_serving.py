@@ -51,34 +51,28 @@ def main():
           f"in {time.perf_counter()-t0:.2f}s")
 
     # --- path B: sharded streaming graph index ------------------------------
+    # external-id semantics end to end: the sharded index rides the same
+    # unified apply(state, UpdateBatch) front door as StreamingIndex
     mesh = jax.make_mesh((8,), ("shard",))
     cfg = test_scale(item_embs.shape[1], n_cap=n_items, metric="ip")
     idx = ShardedIndex(cfg, mesh)
     ext = np.arange(n_items)
-    slots, owners = idx.insert(ext, item_embs)
+    idx.insert(ext, item_embs)
     print(f"sharded index built over {mesh.size} shards")
 
-    gids, gshards, gdists, comps = idx.search(user_vec, k=10, l=32)
-    # map (shard, slot) back to external ids via insert bookkeeping
-    slot_key = {(int(o), int(s)): int(e)
-                for e, s, o in zip(ext, slots, owners)}
-    found = [slot_key.get((int(sh), int(sl)), -1)
-             for sh, sl in zip(gshards[0], gids[0])]
+    found, gshards, gdists, comps = idx.search(user_vec, k=10, l=32)
     exact = set(int(i) for i in np.asarray(ids)[0])
-    overlap = len(exact.intersection(found)) / 10
-    print(f"graph fan-out top-10: {found[:5]}... "
+    overlap = len(exact.intersection(found[0].tolist())) / 10
+    print(f"graph fan-out top-10: {found[0][:5].tolist()}... "
           f"recall vs exact = {overlap:.1f}, comps = {comps} "
           f"(vs {n_items} brute-force)")
 
     # --- streaming churn: delete half the catalogue, serve again -----------
     drop = ext[::2]
-    pairs = [(slots[e], owners[e]) for e in drop]
-    idx.delete_slots(np.array([p[0] for p in pairs]),
-                     np.array([p[1] for p in pairs]))
-    gids2, gsh2, _, _ = idx.search(user_vec, k=10, l=32)
-    found2 = {slot_key.get((int(sh), int(sl)), -1)
-              for sh, sl in zip(gsh2[0], gids2[0])}
-    assert not found2.intersection(set(drop.tolist())), "deleted items served!"
+    idx.delete(drop)
+    found2, _, _, _ = idx.search(user_vec, k=10, l=32)
+    assert not set(found2[0].tolist()).intersection(set(drop.tolist())), \
+        "deleted items served!"
     print(f"after deleting {len(drop)} items in place: "
           f"top-10 contains no deleted items — OK")
 

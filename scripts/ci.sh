@@ -30,4 +30,10 @@ echo "== batched search engine (BENCH_search.json) =="
 python -m benchmarks.search_bench --smoke --out BENCH_search.json
 cat BENCH_search.json
 
+echo "== unified update stream (BENCH_update.json) =="
+# --smoke also enforces the gate: unified apply <= old two-dispatch path
+# (aggregate across batch sizes, 10% slack for 1-core timing noise)
+python -m benchmarks.update_bench --smoke --out BENCH_update.json
+cat BENCH_update.json
+
 echo "CI OK"

@@ -1,5 +1,22 @@
 # The paper's primary contribution: IP-DiskANN — in-place updates of a
 # DiskANN proximity-graph index for streaming ANNS, as a JAX tensor program.
+from .api import (
+    UpdatePolicy,
+    apply,
+    available_policies,
+    delete_batch,
+    get_policy,
+    insert_batch,
+    make_update_batch,
+    maybe_consolidate,
+    mixed_update_batch,
+    pad_update_batch,
+    register_policy,
+)
+
+# the handle's query front door: exported as ``search_index`` because a bare
+# ``search`` attribute would shadow the ``repro.core.search`` submodule
+from .api import search as search_index
 from .backend import (
     DistanceBackend,
     available_backends,
@@ -10,37 +27,60 @@ from .backend import (
 from .consolidate import fresh_consolidate, light_consolidate
 from .delete import ip_delete, ip_delete_many, lazy_delete, lazy_delete_many
 from .driver import RunbookReport, StepMetrics, run_runbook
-from .index import StreamingIndex
+from .index import EvalCounters, OpCounters, StreamingIndex
 from .insert import insert, insert_many
 from .prune import robust_prune
 from .recall import brute_force_topk, graph_recall, recall_at_k
 from .runbook import Runbook, RunbookStep, make_dataset, make_runbook
 from .search import SearchResult, greedy_search, search_batch, search_batch_vmap
 from .search_batched import batched_greedy_search, next_bucket, pad_batch
-from .types import INVALID, ANNConfig, GraphState, init_state
+from .types import (
+    INVALID,
+    KIND_DELETE,
+    KIND_INSERT,
+    ANNConfig,
+    ApplyResult,
+    GraphState,
+    IndexState,
+    UpdateBatch,
+    init_index_state,
+    init_state,
+)
 
 __all__ = [
     "ANNConfig",
+    "ApplyResult",
     "DistanceBackend",
+    "EvalCounters",
     "GraphState",
     "INVALID",
-    "available_backends",
-    "get_backend",
-    "register_backend",
-    "resolve_backend",
+    "IndexState",
+    "KIND_DELETE",
+    "KIND_INSERT",
+    "OpCounters",
     "Runbook",
     "RunbookReport",
     "RunbookStep",
     "SearchResult",
     "StepMetrics",
     "StreamingIndex",
+    "UpdateBatch",
+    "UpdatePolicy",
+    "apply",
+    "available_backends",
+    "available_policies",
     "batched_greedy_search",
     "brute_force_topk",
+    "delete_batch",
     "fresh_consolidate",
+    "get_backend",
+    "get_policy",
     "graph_recall",
     "greedy_search",
+    "init_index_state",
     "init_state",
     "insert",
+    "insert_batch",
     "insert_many",
     "ip_delete",
     "ip_delete_many",
@@ -49,11 +89,19 @@ __all__ = [
     "light_consolidate",
     "make_dataset",
     "make_runbook",
+    "make_update_batch",
+    "maybe_consolidate",
+    "mixed_update_batch",
     "next_bucket",
     "pad_batch",
+    "pad_update_batch",
     "recall_at_k",
+    "register_backend",
+    "register_policy",
+    "resolve_backend",
     "robust_prune",
     "run_runbook",
     "search_batch",
     "search_batch_vmap",
+    "search_index",
 ]

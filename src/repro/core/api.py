@@ -1,0 +1,427 @@
+"""The unified op-stream API: one pure ``apply(state, cfg, batch)`` front door.
+
+The paper's streaming workload is ONE interleaved stream of inserts, deletes
+and queries against ONE index handle.  This module is that handle's
+functional surface:
+
+  * ``IndexState`` (``core/types.py``) carries the graph, the external-id
+    <-> slot map and the per-op counters entirely on device;
+  * ``UpdateBatch`` is the unified op type — a padded lane-batch of mixed
+    inserts and deletes (kind / ext_id / vector / valid-lane mask);
+  * ``apply(state, cfg, batch, policy=..., sequential=...)`` is the single
+    jitted update entry point.  One call compiles to ONE device program per
+    power-of-two bucket: id-map resolution, the batched search phases
+    (through ``core/search_batched.py``'s shared hop loop, delete lanes
+    masked during the insert search and vice versa), the serial write scans
+    and the id-map scatter all fuse — where the old front doors paid two
+    dispatches and a host numpy round-trip per runbook step;
+  * ``search(state, cfg, queries)`` is the query front door, mapping slot
+    ids back to external ids on device;
+  * ``UpdatePolicy`` replaces the old ``mode="ip"/"fresh"`` strings with a
+    registered object (mirroring the ``DistanceBackend`` registry) that owns
+    the delete strategy and the consolidation trigger.
+
+Semantics (pinned lane-for-lane by ``tests/test_api.py``): a mixed batch
+applies all insert lanes first (in lane order), then all delete lanes (in
+lane order), with delete lanes resolving external ids against the
+post-insert map — exactly the old two-call ``insert(...)`` then
+``delete(...)`` sequence, collapsed into one program.  ``sequential=True``
+runs the paper-faithful serial scan (each lane's search sees every earlier
+lane's writes — the bootstrap regime); ``sequential=False`` runs the
+relaxed-visibility batched phases (searches of a kind see the graph as of
+that phase's start — the paper's multi-threaded regime).
+
+Both front doors donate their state argument cleanly: every caller that
+drops its old handle (``state, res = apply(state, cfg, batch)``) lets XLA
+update the multi-MB graph buffers in place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched import insert_many_batched, ip_delete_many_batched
+from .consolidate import fresh_consolidate, light_consolidate
+from .delete import ip_delete_many, lazy_delete_many
+from .insert import insert_many
+from .search import search_batch
+from .search_batched import next_bucket
+from .types import (
+    INVALID,
+    KIND_DELETE,
+    KIND_INSERT,
+    ANNConfig,
+    ApplyResult,
+    GraphState,
+    IndexState,
+    UpdateBatch,
+    clip_ids,
+    init_index_state,
+)
+
+# Incremented once per trace of ``apply`` (not per call): the bucketing
+# regression tests assert ragged batch sizes share one compiled program.
+TRACE_COUNTER = {"apply": 0}
+
+
+# ---------------------------------------------------------------------------
+# Update policies (the old ``mode`` strings, as registered objects)
+# ---------------------------------------------------------------------------
+
+
+class UpdatePolicy:
+    """Pluggable delete strategy + consolidation trigger.
+
+    Mirrors the ``DistanceBackend`` registry: selection is by name, the
+    registered singleton is resolved at trace time (``apply``'s ``policy``
+    argument is static), and custom policies plug in with
+    ``@register_policy("name")``.
+    """
+
+    name = "abstract"
+
+    def delete_many(self, graph: GraphState, cfg: ANNConfig, ps,
+                    *, sequential: bool):
+        """Delete the slots ``ps`` (i32[B], INVALID lanes are no-ops).
+        Returns ``(graph, DeleteStats)`` with per-lane ``ok``/``n_comps``."""
+        raise NotImplementedError
+
+    def should_consolidate(self, cfg: ANNConfig, n_active: int,
+                           n_pending: int) -> bool:
+        """Host-side trigger: consolidate once pending removals exceed the
+        configured fraction of the live set."""
+        if n_pending == 0:
+            return False
+        return n_pending > cfg.consolidation_threshold * max(n_active, 1)
+
+    def consolidate(self, graph: GraphState, cfg: ANNConfig) -> GraphState:
+        """The policy's consolidation pass (host-callable; the FreshDiskANN
+        baseline's Algorithm 4 is host-orchestrated by design)."""
+        raise NotImplementedError
+
+
+_POLICIES: dict[str, UpdatePolicy] = {}
+
+
+def register_policy(name: str):
+    """Class decorator: instantiate and register a policy under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _POLICIES[name] = cls()
+        return cls
+
+    return deco
+
+
+def available_policies() -> tuple:
+    return tuple(sorted(_POLICIES))
+
+
+def get_policy(name: str) -> UpdatePolicy:
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown update policy {name!r}; "
+            f"available: {available_policies()}"
+        ) from None
+
+
+@register_policy("ip")
+class IPDiskANNPolicy(UpdatePolicy):
+    """The paper's contribution: in-place deletes (Alg 5), quarantined slots
+    released by the lightweight Alg 6 sweep (no distance computations)."""
+
+    def delete_many(self, graph, cfg, ps, *, sequential):
+        fn = ip_delete_many if sequential else ip_delete_many_batched
+        return fn(graph, cfg, ps)
+
+    def consolidate(self, graph, cfg):
+        return light_consolidate(graph, cfg)
+
+
+@register_policy("fresh")
+class FreshDiskANNPolicy(UpdatePolicy):
+    """FreshDiskANN baseline: tombstone deletes + batch consolidation
+    (Alg 4) past the threshold."""
+
+    def delete_many(self, graph, cfg, ps, *, sequential):
+        # lazy delete is a trivially cheap mask flip; the serial scan IS the
+        # batched formulation
+        return lazy_delete_many(graph, cfg, ps)
+
+    def consolidate(self, graph, cfg):
+        return fresh_consolidate(graph, cfg)
+
+
+# ---------------------------------------------------------------------------
+# UpdateBatch constructors (host helpers)
+# ---------------------------------------------------------------------------
+
+
+def make_update_batch(kind, ext_ids, vectors, valid=None) -> UpdateBatch:
+    """Assemble an ``UpdateBatch`` from per-lane arrays (no padding)."""
+    kind = jnp.asarray(kind, jnp.int32)
+    ext_ids = jnp.asarray(ext_ids, jnp.int32)
+    vectors = jnp.asarray(vectors, jnp.float32)
+    if valid is None:
+        valid = jnp.ones((kind.shape[0],), bool)
+    else:
+        valid = jnp.asarray(valid, bool)
+    return UpdateBatch(kind=kind, ext_id=ext_ids, vector=vectors, valid=valid)
+
+
+def pad_update_batch(batch: UpdateBatch, bucket: Optional[int] = None
+                     ) -> UpdateBatch:
+    """Pad a batch up to ``bucket`` lanes (default: the next power of two)
+    with masked no-op lanes, so streaming callers compile one program per
+    bucket instead of one per distinct batch size."""
+    b = batch.kind.shape[0]
+    bucket = bucket if bucket is not None else next_bucket(b)
+    if b == bucket:
+        return batch
+
+    def pad(arr, fill):
+        widths = [(0, bucket - b)] + [(0, 0)] * (arr.ndim - 1)
+        return jnp.pad(arr, widths, constant_values=fill)
+
+    return UpdateBatch(
+        kind=pad(batch.kind, KIND_INSERT),
+        ext_id=pad(batch.ext_id, INVALID),
+        vector=pad(batch.vector, 0.0),
+        valid=pad(batch.valid, False),
+    )
+
+
+def insert_batch(ext_ids, vectors, *, bucket: bool = True) -> UpdateBatch:
+    """An insert-only ``UpdateBatch`` (bucket-padded by default).
+
+    External ids must be unique within the batch: duplicate insert lanes
+    would race in the device id-map scatter (undefined winner, stale
+    reverse entries), so they are rejected here on host."""
+    ext_ids = np.asarray(ext_ids)
+    if len(np.unique(ext_ids)) != len(ext_ids):
+        raise ValueError("duplicate external ids in one insert batch")
+    b = make_update_batch(
+        np.full((len(ext_ids),), KIND_INSERT), ext_ids, vectors
+    )
+    return pad_update_batch(b) if bucket else b
+
+
+def delete_batch(ext_ids, dim: int, *, bucket: bool = True) -> UpdateBatch:
+    """A delete-only ``UpdateBatch``; delete lanes carry zero vectors."""
+    ext_ids = np.asarray(ext_ids)
+    b = make_update_batch(
+        np.full((len(ext_ids),), KIND_DELETE), ext_ids,
+        np.zeros((len(ext_ids), dim), np.float32),
+    )
+    return pad_update_batch(b) if bucket else b
+
+
+def mixed_update_batch(ins_ext, ins_vectors, del_ext, dim: int):
+    """A kind-major mixed batch: insert lanes bucket-padded first, delete
+    lanes bucket-padded after.  Returns ``(UpdateBatch, split)`` where
+    ``split`` is the static insert/delete boundary — pass it to ``apply``
+    so each internal phase runs only over its own lane range (the layout
+    costs exactly the two single-kind programs, fused).  Semantics are
+    identical to any interleaved layout of the same ops."""
+    ins = insert_batch(ins_ext, ins_vectors)
+    dele = delete_batch(del_ext, dim)
+    batch = UpdateBatch(*[
+        jnp.concatenate([a, b]) for a, b in zip(ins, dele)
+    ])
+    return batch, ins.kind.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# The unified update front door
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "policy", "sequential", "split")
+)
+def apply(
+    state: IndexState,
+    cfg: ANNConfig,
+    batch: UpdateBatch,
+    *,
+    policy: str = "ip",
+    sequential: bool = False,
+    split: Optional[int] = None,
+):
+    """Apply one mixed insert+delete ``UpdateBatch``; returns
+    ``(IndexState, ApplyResult)``.
+
+    All insert lanes apply first (lane order), then all delete lanes (lane
+    order), deletes resolving against the post-insert id map — the exact
+    semantics of the old two-call sequence, in one compiled program.  Lanes
+    whose ``valid`` is False, whose external id is out of range, or (for
+    deletes) unmapped, are no-ops with ``ok=False``.  Re-inserting a mapped
+    external id rebinds it and clears the stale ``slot2ext`` entry of the
+    previous slot (which stays occupied until deleted).  External ids must
+    be unique per kind within one batch: duplicate insert lanes race in the
+    id-map scatter (undefined winner; ``insert_batch`` rejects them on
+    host), and of duplicate delete lanes only the first applies (the rest
+    report ``ok=False``).
+
+    ``split`` is a static layout hint for kind-major batches (see
+    ``mixed_update_batch``): insert lanes live in ``[0, split)`` and delete
+    lanes in ``[split, B)``, so each internal phase runs only over its own
+    lane range.  It never changes semantics — insert-kind lanes at or past
+    ``split`` (and delete-kind lanes before it) are rejected with
+    ``ok=False`` rather than silently applied out of order.
+    """
+    TRACE_COUNTER["apply"] += 1
+    pol = get_policy(policy)
+    b = batch.kind.shape[0]
+    e_cap = state.ext2slot.shape[0]
+    ext_ok = (batch.ext_id >= 0) & (batch.ext_id < e_cap)
+    sext = jnp.clip(batch.ext_id, 0, e_cap - 1)
+    is_ins = batch.valid & ext_ok & (batch.kind == KIND_INSERT)
+    is_del = batch.valid & ext_ok & (batch.kind == KIND_DELETE)
+    if split is not None:
+        lane = jnp.arange(b)
+        is_ins = is_ins & (lane < split)
+        is_del = is_del & (lane >= split)
+
+    # ---- insert phase ------------------------------------------------------
+    ins_fn = insert_many if sequential else insert_many_batched
+    if split is None:
+        graph, ins_stats = ins_fn(state.graph, cfg, batch.vector, is_ins)
+        ins_slots = ins_stats.slot                  # INVALID on masked/full
+        ins_comps_lane = ins_stats.n_comps
+    else:
+        graph, ins_stats = ins_fn(
+            state.graph, cfg, batch.vector[:split], is_ins[:split]
+        )
+        tail = jnp.full((b - split,), INVALID, jnp.int32)
+        ins_slots = jnp.concatenate([ins_stats.slot, tail])
+        ins_comps_lane = jnp.concatenate(
+            [ins_stats.n_comps.astype(jnp.int32), jnp.zeros_like(tail)]
+        )
+    ok_ins = is_ins & (ins_slots >= 0)
+
+    # rebind: clear the stale reverse entry of a re-inserted external id
+    prev = jnp.where(ok_ins, state.ext2slot[sext], INVALID)
+    slot2ext = state.slot2ext.at[
+        jnp.where(prev >= 0, clip_ids(prev, cfg.n_cap), cfg.n_cap)
+    ].set(INVALID, mode="drop")
+    ext2slot = state.ext2slot.at[
+        jnp.where(ok_ins, sext, e_cap)
+    ].set(ins_slots, mode="drop")
+    slot2ext = slot2ext.at[
+        jnp.where(ok_ins, clip_ids(ins_slots, cfg.n_cap), cfg.n_cap)
+    ].set(batch.ext_id, mode="drop")
+
+    # ---- delete phase (policy-owned strategy) ------------------------------
+    # resolve against the POST-insert map: a batch may delete an id that an
+    # earlier lane of the same batch inserted
+    del_slots = jnp.where(is_del, ext2slot[sext], INVALID)
+    if split is None:
+        graph, del_stats = pol.delete_many(
+            graph, cfg, del_slots, sequential=sequential
+        )
+        del_ok_lane = del_stats.ok
+        del_comps_lane = del_stats.n_comps
+    else:
+        graph, del_stats = pol.delete_many(
+            graph, cfg, del_slots[split:], sequential=sequential
+        )
+        head_f = jnp.zeros((split,), bool)
+        del_ok_lane = jnp.concatenate([head_f, del_stats.ok])
+        del_comps_lane = jnp.concatenate(
+            [jnp.zeros((split,), jnp.int32),
+             del_stats.n_comps.astype(jnp.int32)]
+        )
+    ok_del = is_del & del_ok_lane
+    ext2slot = ext2slot.at[
+        jnp.where(ok_del, sext, e_cap)
+    ].set(INVALID, mode="drop")
+    slot2ext = slot2ext.at[
+        jnp.where(ok_del, clip_ids(del_slots, cfg.n_cap), cfg.n_cap)
+    ].set(INVALID, mode="drop")
+
+    # ---- counters + per-lane result ---------------------------------------
+    ins_comps = jnp.where(is_ins, ins_comps_lane, 0).astype(jnp.int32)
+    del_comps = jnp.where(is_del, del_comps_lane, 0).astype(jnp.int32)
+    new_state = IndexState(
+        graph=graph,
+        ext2slot=ext2slot,
+        slot2ext=slot2ext,
+        n_inserts=state.n_inserts + jnp.sum(ok_ins).astype(jnp.int32),
+        n_deletes=state.n_deletes + jnp.sum(ok_del).astype(jnp.int32),
+        insert_comps=state.insert_comps + jnp.sum(ins_comps),
+        delete_comps=state.delete_comps + jnp.sum(del_comps),
+    )
+    result = ApplyResult(
+        slot=jnp.where(
+            ok_ins, ins_slots, jnp.where(is_del, del_slots, INVALID)
+        ),
+        ok=ok_ins | ok_del,
+        n_comps=ins_comps + del_comps,
+    )
+    return new_state, result
+
+
+# ---------------------------------------------------------------------------
+# The query front door
+# ---------------------------------------------------------------------------
+
+
+def search(
+    state: IndexState,
+    cfg: ANNConfig,
+    queries: jax.Array,
+    *,
+    k: int = 10,
+    l: Optional[int] = None,
+):
+    """Query the handle; returns ``(ext_ids, dists, SearchResult)`` with the
+    slot -> external-id mapping applied on device (the ``SearchResult``
+    keeps slot ids for state-level consumers)."""
+    res = search_batch(state.graph, cfg, queries, k=k, l=l or cfg.l_search)
+    sids = res.topk_ids
+    ext = jnp.where(
+        sids >= 0, state.slot2ext[clip_ids(sids, cfg.n_cap)], INVALID
+    )
+    return ext, res.topk_dists, res
+
+
+def maybe_consolidate(
+    state: IndexState, cfg: ANNConfig, *, policy: str = "ip",
+    force: bool = False,
+) -> tuple[IndexState, bool]:
+    """Run the policy's consolidation pass if its trigger fires (host-side
+    decision, as consolidation is the paper's offline/background activity)."""
+    pol = get_policy(policy)
+    n_active = int(state.graph.n_active)
+    n_pending = int(state.graph.n_pending)
+    if not (force and n_pending > 0) and not pol.should_consolidate(
+        cfg, n_active, n_pending
+    ):
+        return state, False
+    return state._replace(graph=pol.consolidate(state.graph, cfg)), True
+
+
+__all__ = [
+    "TRACE_COUNTER",
+    "UpdatePolicy",
+    "apply",
+    "available_policies",
+    "delete_batch",
+    "get_policy",
+    "init_index_state",
+    "insert_batch",
+    "make_update_batch",
+    "maybe_consolidate",
+    "mixed_update_batch",
+    "pad_update_batch",
+    "register_policy",
+    "search",
+]

@@ -73,7 +73,9 @@ def insert_many_batched(state: GraphState, cfg: ANNConfig, xs: jax.Array,
     )
 
     # phase 1: one shared-hop-loop batched search against the pre-batch graph
-    res = batched_greedy_search(state, cfg, xs_f, k=1, l=cfg.l_build)
+    # (masked lanes are dead from hop 0 and contribute no comps or hops)
+    res = batched_greedy_search(state, cfg, xs_f, k=1, l=cfg.l_build,
+                                valid=valid)
     vis_ids, vis_dists, comps = res.visited_ids, res.visited_dists, res.n_comps
 
     # phase 2: serial link application
@@ -116,9 +118,10 @@ def ip_delete_many_batched(state: GraphState, cfg: ANNConfig, ps: jax.Array):
     valid = (ps >= 0) & state.active[sps]
 
     # phase 1: one shared-hop-loop batched search from every deleted point
+    # (invalid lanes — INVALID or non-active slots — are dead from hop 0)
     x_ps = state.vectors[sps]
     res = batched_greedy_search(state, cfg, x_ps, k=cfg.k_delete,
-                                l=cfg.l_delete)
+                                l=cfg.l_delete, valid=valid)
     vis_b = jnp.where(res.visited_ids == ps[:, None], INVALID,
                       res.visited_ids)
     cands_b = jnp.where(res.topk_ids == ps[:, None], INVALID, res.topk_ids)

@@ -15,6 +15,11 @@ Algorithm 5, TPU form:
 
 Degree overflow is resolved per-append via RobustPrune (as in Algorithm 2),
 which matches the reference implementation's behaviour for fixed-degree rows.
+
+These entry points are owned by the registered ``UpdatePolicy`` objects in
+``core/api.py`` ("ip" -> in-place, "fresh" -> lazy): callers stream deletes
+through the unified ``apply(state, cfg, UpdateBatch)`` front door rather
+than invoking ``ip_delete_many`` / ``lazy_delete_many`` directly.
 """
 from __future__ import annotations
 

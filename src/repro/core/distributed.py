@@ -1,33 +1,38 @@
 """Sharded streaming index: the paper's single-node system scaled out.
 
-Each device along the flattened mesh owns an independent sub-index
-(GraphState stacked on a leading shard axis).  The classic distributed-ANNS
-pattern maps onto shard_map:
+Each device along the flattened mesh owns an independent sub-index — since
+the ``core/api.py`` redesign that is a full device-resident ``IndexState``
+handle (graph + external-id map + op counters) stacked on a leading shard
+axis, and updates go through the SAME jitted ``apply(state, cfg,
+UpdateBatch)`` front door as ``StreamingIndex``, just under ``shard_map``.
+That gives the sharded index real external-id insert/delete/search
+semantics: callers address points by external id only; slots and owner
+arrays are internal.
 
-  * search: the query batch fans out to every shard (replicated); each shard
-    runs ONE natively batched beam over its local graph
-    (core/search_batched.py — a single shared hop loop for the whole batch,
-    not Q vmapped loops) and returns its local top-k; a global top-k merge
-    over the all-gathered (k x S) candidates yields the answer.  One
-    all-gather of k ids+dists per query — tiny versus the beam compute.
-  * insert/delete: updates are routed to their owning shard by slot hash;
-    each shard scans only the updates addressed to it (others no-op).
-    Per-shard serial semantics are preserved — this is exactly the paper's
-    concurrency model (independent streams per shard, no cross-shard edges).
+  * insert/delete: one replicated ``UpdateBatch`` fans out; each shard
+    masks the batch down to the lanes it owns (stable hash routing) and
+    applies them with per-shard serial semantics — exactly the paper's
+    concurrency model (independent streams per shard, no cross-shard
+    edges).  The lane payload is int32 end-to-end (external ids and slots
+    are never laundered through floats).
+  * search: the query batch fans out to every shard (replicated); each
+    shard runs ONE natively batched beam over its local graph
+    (core/search_batched.py), maps its local top-k to external ids on
+    device via its ``slot2ext`` map, and a global top-k merge over the
+    all-gathered (k x S) candidates yields the answer.
 
-Straggler mitigation for serving: ``search(..., backup=True)`` queries all
-shards anyway (fan-out IS the redundancy); at 1000-node scale the merge
-tolerates missing shards by masking their results (see ft/supervisor).
+Straggler mitigation for serving: ``search`` queries all shards anyway
+(fan-out IS the redundancy); at 1000-node scale the merge tolerates missing
+shards by masking their results (see ft/supervisor).
 
-Distance math inside every per-shard beam (and the per-shard update scans)
-rides the kernel engine selected by ``cfg.backend`` — the Pallas
-gather+distance kernel on TPU shards — because greedy_search/insert/delete
-all resolve the backend from the (static) config under ``shard_map``.
+Distance math inside every per-shard beam rides the kernel engine selected
+by ``cfg.backend`` because the unified ``apply``/search paths resolve the
+backend from the (static) config under ``shard_map``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,24 +41,43 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .delete import ip_delete
-from .insert import insert
+from .api import apply, delete_batch, insert_batch
 from .search_batched import batched_greedy_search
-from .types import INVALID, ANNConfig, GraphState, init_state
+from .types import INVALID, ANNConfig, IndexState, clip_ids, init_index_state
+
+
+def as_int_payload(ids) -> jax.Array:
+    """Lossless int32 device payload for slot/external ids.
+
+    The pre-``apply`` update path routed delete payloads through a shared
+    ``jnp.float32`` buffer, which silently rounds integers above 2**24; the
+    unified op stream is int-clean end-to-end.  Guarded here so a regression
+    cannot reintroduce the rounding."""
+    arr = np.asarray(ids, np.int64)
+    if arr.size and (arr.max() >= 2**31 or arr.min() < -(2**31)):
+        raise OverflowError("id payload exceeds int32 range")
+    return jnp.asarray(arr.astype(np.int32))
 
 
 class ShardedIndex:
-    """S sub-indexes run in SPMD over a 1-d ("shard",) mesh."""
+    """S sub-indexes run in SPMD over a 1-d ("shard",) mesh, all fronted by
+    the unified ``apply`` op stream (external-id semantics per shard)."""
 
-    def __init__(self, cfg: ANNConfig, mesh: Mesh,
-                 axis: str = "shard"):
+    def __init__(self, cfg: ANNConfig, mesh: Mesh, axis: str = "shard",
+                 policy: str = "ip", max_external_id: Optional[int] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.axis = axis
+        self.policy = policy
         self.n_shards = mesh.shape[axis]
-        # stacked per-shard states, sharded on the leading axis
-        self.states = jax.device_put(
-            jax.vmap(lambda _: init_state(cfg))(jnp.arange(self.n_shards)),
+        if max_external_id is None:
+            max_external_id = cfg.n_cap * 4
+        self.max_external_id = max_external_id
+        # stacked per-shard handles, sharded on the leading axis
+        self.states: IndexState = jax.device_put(
+            jax.vmap(lambda _: init_index_state(cfg, max_external_id))(
+                jnp.arange(self.n_shards)
+            ),
             NamedSharding(mesh, P(axis)),
         )
         self._search = self._build_search()
@@ -63,20 +87,24 @@ class ShardedIndex:
 
     def _build_search(self):
         cfg, axis = self.cfg, self.axis
-        spec_state = P(axis)
-        n_shards = self.n_shards
 
         @functools.partial(jax.jit, static_argnames=("k", "l"))
         def search(states, queries, *, k: int, l: int):
             def shard_fn(state, q):
                 state = jax.tree.map(lambda x: x[0], state)  # unstack local
 
-                res = batched_greedy_search(state, cfg, q, k=k, l=l)
+                res = batched_greedy_search(state.graph, cfg, q, k=k, l=l)
                 ids, dists, comps = (
                     res.topk_ids, res.topk_dists, res.n_comps
                 )                                            # (Q, k) local
+                # device-resident id map: local slots -> external ids
+                ext = jnp.where(
+                    ids >= 0,
+                    state.slot2ext[clip_ids(ids, cfg.n_cap)],
+                    INVALID,
+                )
                 # global merge: gather every shard's top-k and re-select
-                all_ids = lax.all_gather(ids, axis)          # (S, Q, k)
+                all_ids = lax.all_gather(ext, axis)          # (S, Q, k)
                 all_d = lax.all_gather(dists, axis)
                 shard_of = lax.broadcasted_iota(
                     jnp.int32, all_ids.shape, 0
@@ -94,7 +122,7 @@ class ShardedIndex:
 
             return shard_map(
                 shard_fn, mesh=self.mesh,
-                in_specs=(spec_state, P()),       # queries replicated
+                in_specs=(P(axis), P()),       # queries replicated
                 out_specs=(P(axis), P(axis), P(axis), P(axis)),
                 check_rep=False,  # while-loop carries mix varying/invariant axes
             )(states, queries)
@@ -102,37 +130,25 @@ class ShardedIndex:
         return search
 
     def _build_update(self):
-        cfg, axis = self.cfg, self.axis
+        cfg, axis, policy = self.cfg, self.axis, self.policy
 
-        @functools.partial(jax.jit, static_argnames=("op",))
-        def update(states, payload, shard_ids, *, op: str):
-            """payload: (B, dim) vectors (insert) or (B,) slots (delete);
-            shard_ids: (B,) owner of each update."""
+        @jax.jit
+        def update(states, batch, owners):
+            """batch: a replicated ``UpdateBatch``; owners: i32[B] owning
+            shard of each lane.  Every shard runs the same unified ``apply``
+            with non-owned lanes masked invalid."""
 
-            def shard_fn(state, payload, shard_ids):
+            def shard_fn(state, batch, owners):
                 state = jax.tree.map(lambda x: x[0], state)
                 me = lax.axis_index(axis)
-
-                def step(st, x):
-                    item, owner = x
-                    mine = owner == me
-
-                    def apply(s):
-                        if op == "insert":
-                            s, stats = insert(s, cfg, item)
-                            return s, stats.slot
-                        s, _ = ip_delete(s, cfg, item.astype(jnp.int32))
-                        return s, jnp.int32(0)
-
-                    def skip(s):
-                        return s, jnp.int32(INVALID)
-
-                    return lax.cond(mine, apply, skip, st)
-
-                st, slots = lax.scan(step, state, (payload, shard_ids))
+                mine = batch._replace(valid=batch.valid & (owners == me))
+                # per-shard serial semantics (the paper's concurrency model)
+                state, res = apply(
+                    state, cfg, mine, policy=policy, sequential=True
+                )
                 return (
-                    jax.tree.map(lambda x: x[None], st),
-                    slots[None],
+                    jax.tree.map(lambda x: x[None], state),
+                    jax.tree.map(lambda x: x[None], res),
                 )
 
             return shard_map(
@@ -140,7 +156,7 @@ class ShardedIndex:
                 in_specs=(P(axis), P(), P()),
                 out_specs=(P(axis), P(axis)),
                 check_rep=False,
-            )(states, payload, shard_ids)
+            )(states, batch, owners)
 
         return update
 
@@ -151,22 +167,76 @@ class ShardedIndex:
         return (np.asarray(ext_ids, np.int64) * 2654435761 % 2**31
                 % self.n_shards).astype(np.int32)
 
-    def insert(self, ext_ids, vectors) -> np.ndarray:
+    def insert(self, ext_ids, vectors):
+        """Insert by external id; returns (slots, owners) bookkeeping (the
+        slot within the owner shard — informational, callers address points
+        by external id)."""
+        ext_ids = np.asarray(ext_ids)
+        oob = (ext_ids < 0) | (ext_ids >= self.max_external_id)
+        if oob.any():
+            raise ValueError(
+                f"external id(s) outside [0, {self.max_external_id}): "
+                f"{ext_ids[oob][:8].tolist()}"
+            )
         owners = self.route(ext_ids)
-        self.states, slots = self._update(
-            self.states, jnp.asarray(vectors, jnp.float32),
-            jnp.asarray(owners), op="insert",
+        batch = insert_batch(ext_ids, vectors)
+        pad = batch.kind.shape[0] - len(ext_ids)
+        self.states, res = self._update(
+            self.states, batch,
+            as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
         )
-        local = np.asarray(slots)                # (S, B) INVALID off-owner
-        return local.max(axis=0), owners         # slot within owner shard
+        ok = np.asarray(res.ok).any(axis=0)[: len(ext_ids)]
+        if not ok.all():
+            raise RuntimeError(
+                f"insert failed on owning shard (capacity exhausted) for "
+                f"external id(s) {ext_ids[~ok][:8].tolist()}"
+            )
+        local = np.asarray(res.slot)             # (S, B) INVALID off-owner
+        return local.max(axis=0)[: len(ext_ids)], owners
+
+    def delete(self, ext_ids) -> None:
+        """Delete by external id, routed to the owning shard.  Duplicates
+        within one call delete once; unknown ids raise ``KeyError`` after
+        the known ids of the batch have been applied (the id map lives on
+        device — pre-validation would cost a host sync per call)."""
+        ext_ids = np.asarray(ext_ids)
+        _, keep = np.unique(ext_ids, return_index=True)
+        ext_ids = ext_ids[np.sort(keep)]
+        owners = self.route(ext_ids)
+        batch = delete_batch(ext_ids, self.cfg.dim)
+        pad = batch.kind.shape[0] - len(ext_ids)
+        self.states, res = self._update(
+            self.states, batch,
+            as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
+        )
+        ok = np.asarray(res.ok).any(axis=0)[: len(ext_ids)]
+        if not ok.all():
+            raise KeyError(
+                f"delete of unknown external id(s): "
+                f"{ext_ids[~ok][:8].tolist()}"
+            )
 
     def delete_slots(self, slots, owners) -> None:
+        """Deprecated shim (pre-external-id API): delete by (slot, owner)
+        pairs.  Recovers the external ids from the device-resident
+        ``slot2ext`` maps and routes an int32 payload through the unified
+        ``apply`` stream — ids above 2**24 survive exactly (the old path
+        carried slots in a float32 buffer)."""
+        slots = np.asarray(as_int_payload(slots))
+        owners = np.asarray(owners, np.int64)
+        ext = np.asarray(self.states.slot2ext)[owners, slots]
+        if (ext < 0).any():
+            raise KeyError("delete_slots of unoccupied slot(s)")
+        batch = delete_batch(ext, self.cfg.dim)
+        pad = batch.kind.shape[0] - len(ext)
         self.states, _ = self._update(
-            self.states, jnp.asarray(slots, jnp.float32),
-            jnp.asarray(owners), op="delete",
+            self.states, batch,
+            as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
         )
 
     def search(self, queries, k=10, l=64):
+        """Returns (ext_ids (Q, k), owner shards (Q, k), dists (Q, k),
+        total comps) — ids are EXTERNAL ids since the api redesign."""
         ids, shards, dists, comps = self._search(
             self.states, jnp.asarray(queries, jnp.float32), k=k, l=l
         )

@@ -27,12 +27,15 @@ class RunbookReport:
     name: str
     mode: str
     steps: List[StepMetrics]
-    counters: "object"
+    counters: "object"            # serving-side OpCounters
     avg_recall: float = 0.0
+    eval_counters: "object" = None  # evaluation-side accounting (recall sweeps)
 
     def summary(self) -> dict:
+        """Serving-side load only: evaluation sweeps (``recall``) book into
+        ``eval_counters`` and are reported under separate ``eval_*`` keys."""
         c = self.counters
-        return {
+        out = {
             "runbook": self.name,
             "mode": self.mode,
             "avg_recall@10": round(self.avg_recall, 4),
@@ -41,6 +44,10 @@ class RunbookReport:
             "search_s": round(c.search_s, 3),
             "n_consolidations": c.n_consolidations,
         }
+        if self.eval_counters is not None:
+            out["eval_search_s"] = round(self.eval_counters.search_s, 3)
+            out["eval_queries"] = self.eval_counters.n_queries
+        return out
 
 
 def run_runbook(
@@ -62,11 +69,13 @@ def run_runbook(
             index.delete(step.delete_ids)
         do_eval = (t % eval_every == 0) and index.n_active > k
         if do_eval:
+            # evaluation traffic books into the index's eval counters, never
+            # into the serving counters the report summarises
             t0 = time.perf_counter()
-            comps0 = index.counters.search_comps
+            comps0 = index.eval_counters.search_comps
             r = index.recall(rb.queries, k=k)
             dt = time.perf_counter() - t0
-            dcomps = index.counters.search_comps - comps0
+            dcomps = index.eval_counters.search_comps - comps0
             metrics.append(
                 StepMetrics(
                     step=t,
@@ -90,4 +99,5 @@ def run_runbook(
         steps=metrics,
         counters=index.counters,
         avg_recall=avg,
+        eval_counters=index.eval_counters,
     )

@@ -1,12 +1,26 @@
-"""StreamingIndex — the public API over the IP-DiskANN / FreshDiskANN engine.
+"""StreamingIndex — the host compatibility shell over the device-resident
+index handle.
 
-Host-side orchestration (external-id mapping, consolidation policy, counters)
-around the pure jitted update/search kernels.  ``mode``:
+Since the ``core/api.py`` redesign this class owns no index state of its
+own: the external-id map, the graph and the per-op counters all live in one
+device-resident ``IndexState`` pytree, and every insert/delete routes
+through the single jitted ``apply(state, cfg, UpdateBatch)`` front door
+(``ShardedIndex`` rides the very same function under ``shard_map``).  What
+remains here is host orchestration only: wall-clock timing, the
+bootstrap-vs-batched windowing heuristic, the consolidation trigger (via
+the registered ``UpdatePolicy``) and the legacy exception contract.
 
-  * ``"ip"``    — IP-DiskANN: in-place deletes (Alg 5) + lightweight Alg 6
-                  sweep when quarantined slots exceed the threshold;
-  * ``"fresh"`` — FreshDiskANN baseline: tombstone deletes + batch
-                  consolidation (Alg 4) past the threshold.
+Deprecation shims for the pre-handle API:
+
+  * ``mode="ip"/"fresh"`` — now the name of a registered ``UpdatePolicy``
+    (``core/api.py``); the constructor keyword and ``.mode`` attribute stay;
+  * ``.state`` — reads/writes the ``GraphState`` inside the handle
+    (``.istate`` is the full ``IndexState``);
+  * ``._ext2slot`` / ``._slot2ext`` — read-only numpy views of the
+    device-resident maps (the old host arrays are gone).
+
+Evaluation traffic (``recall``) books into ``eval_counters``, never into
+the serving ``counters`` — so runbook reports reflect serving load only.
 """
 from __future__ import annotations
 
@@ -14,22 +28,29 @@ import dataclasses
 import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .batched import insert_many_batched, ip_delete_many_batched
-from .consolidate import fresh_consolidate, light_consolidate
-from .delete import ip_delete_many, lazy_delete_many
-from .insert import insert_many
+from .api import (
+    apply,
+    available_policies,
+    delete_batch,
+    get_policy,
+    init_index_state,
+    insert_batch,
+    maybe_consolidate,
+    search,
+)
 from .recall import brute_force_topk, recall_at_k
-from .search import search_batch
-from .search_batched import next_bucket, pad_batch
-from .types import INVALID, ANNConfig, GraphState, init_state
+from .types import ANNConfig, GraphState, IndexState
+
+import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass
 class OpCounters:
+    """Serving-side accounting (host wall clock + device comp counts)."""
+
     insert_s: float = 0.0
     delete_s: float = 0.0        # includes consolidation (paper's accounting)
     search_s: float = 0.0
@@ -40,6 +61,16 @@ class OpCounters:
     delete_comps: int = 0
     search_comps: int = 0
     n_consolidations: int = 0
+
+
+@dataclasses.dataclass
+class EvalCounters:
+    """Evaluation-side accounting: ``recall()`` and runbook eval sweeps book
+    here so they never pollute the serving counters."""
+
+    search_s: float = 0.0
+    n_queries: int = 0
+    search_comps: int = 0
 
 
 class StreamingIndex:
@@ -53,48 +84,73 @@ class StreamingIndex:
         batch_updates: bool = False,
         backend: Optional[str] = None,
     ):
-        """``batch_updates``: beyond-paper optimisation — run the search
-        phase of a batch of updates data-parallel (see core/batched.py).
+        """``mode``: the update policy name (legacy keyword — policies are
+        registered objects now, see ``core/api.py``).  ``batch_updates``:
+        beyond-paper optimisation — run the search phase of a batch of
+        updates data-parallel (relaxed visibility, see core/batched.py).
         ``backend``: override ``cfg.backend`` (the distance kernel engine;
         see core/backend.py) without rebuilding the config by hand."""
-        assert mode in ("ip", "fresh")
+        assert mode in available_policies(), (
+            f"unknown policy {mode!r}; available: {available_policies()}"
+        )
         if backend is not None:
             cfg = dataclasses.replace(cfg, backend=backend)
         self.cfg = cfg
         self.mode = mode
+        self.policy = get_policy(mode)
         self.batch_updates = batch_updates
-        self.state: GraphState = init_state(cfg)
         if max_external_id is None:
             max_external_id = cfg.n_cap * 4
-        if max_external_id <= 0:
-            raise ValueError(
-                f"max_external_id must be positive, got {max_external_id}"
-            )
-        self._ext2slot = np.full((max_external_id,), INVALID, np.int64)
-        self._slot2ext = np.full((cfg.n_cap,), INVALID, np.int64)
+        self.max_external_id = max_external_id
+        self.istate: IndexState = init_index_state(cfg, max_external_id)
         self.counters = OpCounters()
+        self.eval_counters = EvalCounters()
+
+    # -- deprecation shims ---------------------------------------------------
+
+    @property
+    def state(self) -> GraphState:
+        """The graph inside the handle (pre-handle callers read this)."""
+        return self.istate.graph
+
+    @state.setter
+    def state(self, graph: GraphState) -> None:
+        self.istate = self.istate._replace(graph=graph)
+
+    @property
+    def _ext2slot(self) -> np.ndarray:
+        """Read-only numpy view of the device-resident ext -> slot map."""
+        return np.asarray(self.istate.ext2slot)
+
+    @property
+    def _slot2ext(self) -> np.ndarray:
+        """Read-only numpy view of the device-resident slot -> ext map."""
+        return np.asarray(self.istate.slot2ext)
 
     # -- updates -----------------------------------------------------------
 
-    def _apply_insert(self, ext_ids, vectors, batched: bool) -> None:
-        xs = jnp.asarray(vectors, jnp.float32)
-        n = len(ext_ids)
-        if batched:
-            # pad ragged batches up to the power-of-two bucket with masked
-            # no-op lanes so every bucket size compiles exactly once
-            bucket = next_bucket(n)
-            valid = jnp.arange(bucket) < n
-            self.state, stats = insert_many_batched(
-                self.state, self.cfg, pad_batch(xs, n), valid
+    def _apply(self, batch, *, sequential: bool):
+        self.istate, res = apply(
+            self.istate, self.cfg, batch,
+            policy=self.mode, sequential=sequential,
+        )
+        return res
+
+    def _apply_insert(self, ext_ids, vectors, batched: bool):
+        oob = (ext_ids < 0) | (ext_ids >= self.max_external_id)
+        if oob.any():
+            raise ValueError(
+                f"external id(s) outside [0, {self.max_external_id}): "
+                f"{ext_ids[oob][:8].tolist()}"
             )
-        else:
-            self.state, stats = insert_many(self.state, self.cfg, xs)
-        slots = np.asarray(stats.slot)[:n]
-        self.counters.insert_comps += int(np.asarray(stats.n_comps)[:n].sum())
-        if np.any(slots < 0):
+        res = self._apply(
+            insert_batch(ext_ids, vectors), sequential=not batched
+        )
+        ok = np.asarray(res.ok)
+        n = len(ext_ids)
+        self.counters.insert_comps += int(np.asarray(res.n_comps).sum())
+        if not ok[:n].all():
             raise RuntimeError("index capacity exhausted")
-        self._ext2slot[np.asarray(ext_ids)] = slots
-        self._slot2ext[slots] = np.asarray(ext_ids)
 
     def insert(self, ext_ids: np.ndarray, vectors: np.ndarray) -> None:
         assert len(ext_ids) == len(vectors)
@@ -135,73 +191,75 @@ class StreamingIndex:
         self.counters.n_inserts += len(ext_ids)
 
     def delete(self, ext_ids: np.ndarray) -> None:
+        """Delete by external id.  Duplicates within one call are deleted
+        once.  Unknown ids raise ``KeyError`` — note the shim contract
+        changed with the device-resident map: the known ids of the batch
+        ARE applied (and booked) before the raise, where the old host-map
+        code pre-validated and applied nothing.  Pre-validating would need
+        a device->host map sync per call, defeating the handle design."""
         t0 = time.perf_counter()
-        slots = self._ext2slot[np.asarray(ext_ids)]
-        if np.any(slots < 0):
-            raise KeyError("delete of unknown external id")
-        # pad to the next power-of-two bucket with INVALID (a no-op delete):
-        # keeps the number of distinct compiled batch shapes logarithmic
-        pad = next_bucket(len(slots))
-        ps = jnp.asarray(
-            np.concatenate([slots, np.full(pad - len(slots), -1)]), jnp.int32
+        ext_ids = np.asarray(ext_ids)
+        _, first = np.unique(ext_ids, return_index=True)
+        ext_ids = ext_ids[np.sort(first)]   # dedupe, keep caller order
+        res = self._apply(
+            delete_batch(ext_ids, self.cfg.dim),
+            sequential=not self.batch_updates,
         )
-        if self.mode == "ip":
-            dele = (ip_delete_many_batched if self.batch_updates
-                    else ip_delete_many)
-            self.state, stats = dele(self.state, self.cfg, ps)
-            self.counters.delete_comps += int(np.asarray(stats.n_comps).sum())
-        else:
-            self.state, _ = lazy_delete_many(self.state, self.cfg, ps)
-        self._ext2slot[np.asarray(ext_ids)] = INVALID
-        self._slot2ext[slots] = INVALID
+        self.counters.delete_comps += int(np.asarray(res.n_comps).sum())
+        ok = np.asarray(res.ok)[: len(ext_ids)]
         self.counters.delete_s += time.perf_counter() - t0
-        self.counters.n_deletes += len(ext_ids)
+        self.counters.n_deletes += int(ok.sum())
         self.maybe_consolidate()
+        if not ok.all():
+            raise KeyError(
+                f"delete of unknown external id(s): "
+                f"{ext_ids[~ok][:8].tolist()}"
+            )
 
     def maybe_consolidate(self, force: bool = False) -> bool:
-        n_active = int(self.state.n_active)
-        n_pending = int(self.state.n_pending)
-        thresh = self.cfg.consolidation_threshold * max(n_active, 1)
-        if not force and n_pending <= thresh:
-            return False
-        if n_pending == 0:
-            return False
         t0 = time.perf_counter()
-        if self.mode == "ip":
-            self.state = light_consolidate(self.state, self.cfg)
-        else:
-            self.state = fresh_consolidate(self.state, self.cfg)
-        jax.block_until_ready(self.state.adj)
-        self.counters.delete_s += time.perf_counter() - t0
-        self.counters.n_consolidations += 1
-        return True
+        self.istate, did = maybe_consolidate(
+            self.istate, self.cfg, policy=self.mode, force=force
+        )
+        if did:
+            jax.block_until_ready(self.istate.graph.adj)
+            self.counters.delete_s += time.perf_counter() - t0
+            self.counters.n_consolidations += 1
+        return did
 
     # -- queries -----------------------------------------------------------
 
-    def search(self, queries: np.ndarray, k: int = 10, l: Optional[int] = None):
-        """Returns (ext_ids (Q, k), dists (Q, k))."""
+    def _search(self, queries, k, l, counters):
+        """One query batch through the handle's front door, booked into the
+        given counters object (serving or evaluation)."""
         t0 = time.perf_counter()
-        l = l or self.cfg.l_search
-        res = search_batch(
-            self.state, self.cfg, jnp.asarray(queries, jnp.float32), k=k, l=l
+        ext, dists, res = search(
+            self.istate, self.cfg, jnp.asarray(queries, jnp.float32),
+            k=k, l=l or self.cfg.l_search,
         )
-        ids = np.asarray(res.topk_ids)
-        self.counters.search_comps += int(np.asarray(res.n_comps).sum())
-        self.counters.search_s += time.perf_counter() - t0
-        self.counters.n_queries += queries.shape[0]
-        ext = np.where(ids >= 0, self._slot2ext[np.clip(ids, 0, None)], INVALID)
-        return ext, np.asarray(res.topk_dists), ids
+        ext = np.asarray(ext)
+        counters.search_comps += int(np.asarray(res.n_comps).sum())
+        counters.search_s += time.perf_counter() - t0
+        counters.n_queries += queries.shape[0]
+        return ext, np.asarray(dists), np.asarray(res.topk_ids)
+
+    def search(self, queries: np.ndarray, k: int = 10, l: Optional[int] = None):
+        """Returns (ext_ids (Q, k), dists (Q, k), slot_ids (Q, k))."""
+        return self._search(queries, k, l, self.counters)
 
     # -- evaluation --------------------------------------------------------
 
     def recall(self, queries: np.ndarray, k: int = 10,
                l: Optional[int] = None) -> float:
-        _, _, slot_ids = self.search(queries, k=k, l=l)
+        """Recall@k against the exact oracle.  Books into ``eval_counters``
+        (serving counters untouched — evaluation is not serving load)."""
+        _, _, slot_ids = self._search(queries, k, l, self.eval_counters)
         true_ids, _ = brute_force_topk(
-            self.state, self.cfg, jnp.asarray(queries, jnp.float32), k=k
+            self.istate.graph, self.cfg, jnp.asarray(queries, jnp.float32),
+            k=k,
         )
         return recall_at_k(slot_ids, true_ids, k)
 
     @property
     def n_active(self) -> int:
-        return int(self.state.n_active)
+        return int(self.istate.graph.n_active)

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,11 +74,27 @@ def insert(state: GraphState, cfg: ANNConfig, x: jax.Array):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def insert_many(state: GraphState, cfg: ANNConfig, xs: jax.Array):
-    """Serial (paper-faithful) scan of inserts.  xs: (B, dim)."""
+def insert_many(state: GraphState, cfg: ANNConfig, xs: jax.Array,
+                valid: Optional[jax.Array] = None):
+    """Serial (paper-faithful) scan of inserts.  xs: (B, dim).
 
-    def step(st, x):
-        st, stats = insert(st, cfg, x)
+    ``valid``: optional bool[B] lane mask — False lanes are no-ops (no slot
+    allocated, no search, no write), so ragged bootstrap batches can ride a
+    padded power-of-two bucket and every bucket size compiles exactly once
+    (the batched path's ``pad_batch`` discipline, applied to the serial scan).
+    """
+    if valid is None:
+        valid = jnp.ones((xs.shape[0],), bool)
+
+    def step(st, args):
+        x, ok = args
+
+        def skip(s):
+            return s, InsertStats(
+                jnp.int32(INVALID), jnp.int32(0), jnp.int32(0)
+            )
+
+        st, stats = lax.cond(ok, lambda s: insert(s, cfg, x), skip, st)
         return st, stats
 
-    return lax.scan(step, state, xs)
+    return lax.scan(step, state, (xs, valid))

@@ -14,31 +14,41 @@ import jax
 import numpy as np
 
 from .backend import resolve_backend
-from .types import ANNConfig, GraphState
+from .types import ANNConfig, GraphState, IndexState
+
+
+def _graph(state) -> GraphState:
+    """Accept either a raw ``GraphState`` or the device-resident handle."""
+    return state.graph if isinstance(state, IndexState) else state
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
-def brute_force_topk(state: GraphState, cfg: ANNConfig, queries, *, k: int):
-    """Exact top-k over the live point set.  queries: (Q, D).
+def brute_force_topk(state, cfg: ANNConfig, queries, *, k: int):
+    """Exact top-k over the live point set.  queries: (Q, D); ``state`` may
+    be a ``GraphState`` or an ``IndexState`` handle.
 
     Delegates to the kernel engine selected by ``cfg.backend`` (the Pallas
     streaming top-k scorer on TPU; one pair-distance matrix + top_k on jnp).
     """
-    return resolve_backend(cfg).brute_force_topk(state, cfg, queries, k=k)
+    return resolve_backend(cfg).brute_force_topk(
+        _graph(state), cfg, queries, k=k
+    )
 
 
-def graph_recall(state: GraphState, cfg: ANNConfig, queries, *, k: int,
+def graph_recall(state, cfg: ANNConfig, queries, *, k: int,
                  l: Optional[int] = None) -> float:
     """Recall@k of the batched graph search against the exact oracle.
 
-    Runs the whole query set through one shared-hop-loop beam search and one
+    ``state`` may be a ``GraphState`` or an ``IndexState`` handle.  Runs the
+    whole query set through one shared-hop-loop beam search and one
     brute-force scan — the state-level counterpart of
-    ``StreamingIndex.recall`` (which also tracks op counters).
+    ``StreamingIndex.recall`` (which also tracks eval counters).
     """
     from .search import search_batch
 
-    res = search_batch(state, cfg, queries, k=k, l=l or cfg.l_search)
-    true_ids, _ = brute_force_topk(state, cfg, queries, k=k)
+    g = _graph(state)
+    res = search_batch(g, cfg, queries, k=k, l=l or cfg.l_search)
+    true_ids, _ = brute_force_topk(g, cfg, queries, k=k)
     return recall_at_k(res.topk_ids, true_ids, k)
 
 

@@ -98,6 +98,7 @@ def batched_greedy_search(
     l: int,
     max_visits: Optional[int] = None,
     distance_fn: Optional[BatchedDistanceFn] = None,
+    valid: Optional[jax.Array] = None,
 ) -> SearchResult:
     """GreedySearch (Algorithm 1) for B queries in one shared hop loop.
 
@@ -107,6 +108,11 @@ def batched_greedy_search(
     ``distance_fn`` (batched signature: ``(state, cfg, (B, D) queries,
     (B, M) ids) -> (B, M)``) overrides the engine's
     ``dists_to_ids_batched`` for experiments.
+    ``valid`` (bool[B]) masks whole lanes out of the traversal: a masked
+    lane starts with an empty beam, performs no distance computations, adds
+    no hops to the shared loop and returns all-INVALID results — the
+    mechanism bucket-padded callers (``search_batch``, ``core/api.py``) use
+    to make padding lanes free.
     """
     TRACE_COUNTER["batched_greedy_search"] += 1
     if max_visits is None:
@@ -117,8 +123,9 @@ def batched_greedy_search(
 
     b = queries.shape[0]
     bidx = jnp.arange(b)
-    start = state.start
-    starts = jnp.broadcast_to(start, (b,))
+    starts = jnp.broadcast_to(state.start, (b,))
+    if valid is not None:
+        starts = jnp.where(valid, starts, INVALID)
     d0 = dist_fn(state, cfg, queries, starts[:, None])[:, 0]
 
     beam_ids = jnp.full((b, l), INVALID, jnp.int32).at[:, 0].set(starts)
@@ -127,7 +134,7 @@ def batched_greedy_search(
     )
     seen = jnp.zeros((b, cfg.n_cap), bool).at[
         bidx, clip_ids(starts, cfg.n_cap)
-    ].set(start >= 0)
+    ].set(starts >= 0)
 
     init = _BLoop(
         beam_ids=beam_ids,

@@ -115,6 +115,75 @@ def init_state(cfg: ANNConfig, dtype=jnp.float32) -> GraphState:
 
 
 # ---------------------------------------------------------------------------
+# Device-resident index handle (graph + external-id map + op counters)
+# ---------------------------------------------------------------------------
+
+# ``UpdateBatch.kind`` codes.  An update stream is one sequence of these.
+KIND_INSERT = 0
+KIND_DELETE = 1
+
+
+class IndexState(NamedTuple):
+    """The device-resident index handle: one pytree holding everything a
+    front door needs — the graph, the external-id <-> slot map, and per-op
+    counters.  ``core/api.py::apply`` is the single update entry point over
+    this state; no host-side id bookkeeping exists anywhere.
+    """
+
+    graph: GraphState
+    ext2slot: jax.Array      # i32[max_ext]  external id -> slot (INVALID free)
+    slot2ext: jax.Array      # i32[n_cap]    slot -> external id (INVALID free)
+    n_inserts: jax.Array     # i32[]  applied inserts
+    n_deletes: jax.Array     # i32[]  applied deletes
+    insert_comps: jax.Array  # i32[]  distance comps spent in insert lanes
+    delete_comps: jax.Array  # i32[]  distance comps spent in delete lanes
+
+
+class UpdateBatch(NamedTuple):
+    """One padded lane-batch of the unified update stream.
+
+    ``kind[b]`` in {KIND_INSERT, KIND_DELETE}; ``vector`` rows are ignored
+    (zeros by convention) for delete lanes; ``valid`` masks no-op padding
+    lanes so ragged streaming batches ride power-of-two buckets without
+    recompiling (see ``core/api.py::pad_update_batch``).
+    """
+
+    kind: jax.Array    # i32[B]
+    ext_id: jax.Array  # i32[B]
+    vector: jax.Array  # f32[B, dim]
+    valid: jax.Array   # bool[B]
+
+
+class ApplyResult(NamedTuple):
+    """Per-lane outcome of one ``apply`` call."""
+
+    slot: jax.Array     # i32[B]  slot assigned (insert) / freed (delete)
+    ok: jax.Array       # bool[B] lane applied (False: masked, unknown ext id,
+                        #         or capacity exhausted)
+    n_comps: jax.Array  # i32[B]  distance computations spent by the lane
+
+
+def init_index_state(
+    cfg: ANNConfig, max_external_id: int, dtype=jnp.float32
+) -> IndexState:
+    """A fresh device-resident handle admitting external ids in
+    ``[0, max_external_id)``."""
+    if max_external_id <= 0:
+        raise ValueError(
+            f"max_external_id must be positive, got {max_external_id}"
+        )
+    return IndexState(
+        graph=init_state(cfg, dtype),
+        ext2slot=jnp.full((max_external_id,), INVALID, jnp.int32),
+        slot2ext=jnp.full((cfg.n_cap,), INVALID, jnp.int32),
+        n_inserts=jnp.int32(0),
+        n_deletes=jnp.int32(0),
+        insert_comps=jnp.int32(0),
+        delete_comps=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Small row utilities
 # ---------------------------------------------------------------------------
 

@@ -30,7 +30,6 @@ def main(argv=None) -> None:
         )
 
     import jax
-    import numpy as np
 
     from ..configs.ann import test_scale
     from ..core import StreamingIndex
@@ -45,19 +44,14 @@ def main(argv=None) -> None:
 
         mesh = jax.make_mesh((args.shards,), ("shard",))
         cfg = test_scale(args.dim, n_cap)
-        idx = ShardedIndex(cfg, mesh)
-        slot_of = {}
+        idx = ShardedIndex(cfg, mesh,
+                           max_external_id=args.rate * (args.ticks + 1))
         for t in range(args.ticks):
             ins_ids, vecs, del_ids = stream.step_at(t)
-            slots, owners = idx.insert(ins_ids, vecs)
-            for e, sl, ow in zip(ins_ids, slots, owners):
-                slot_of[int(e)] = (int(sl), int(ow))
+            # external-id semantics end to end: no host slot bookkeeping
+            idx.insert(ins_ids, vecs)
             if len(del_ids):
-                pairs = [slot_of.pop(int(e)) for e in del_ids]
-                idx.delete_slots(
-                    np.array([p[0] for p in pairs]),
-                    np.array([p[1] for p in pairs]),
-                )
+                idx.delete(del_ids)
             ids, shards, dists, comps = idx.search(
                 stream.queries_at(t, args.queries), k=10
             )

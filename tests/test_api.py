@@ -1,0 +1,380 @@
+"""The unified op-stream front door (core/api.py).
+
+Pins the redesign's contracts:
+
+  * one jitted ``apply`` processes a mixed insert+delete ``UpdateBatch``
+    lane-for-lane identically to the sequential two-call semantics, for
+    both update policies, both visibility modes and both metrics;
+  * the external-id map lives in device state: delete -> consolidate ->
+    re-insert reuses slots without stale ``slot2ext`` entries;
+  * the ``StreamingIndex`` compat shell is a pure shim: its state equals
+    raw ``apply`` calls (policy x metric matrix);
+  * ragged batch sizes share one compiled program per power-of-two bucket
+    (including the serial bootstrap path);
+  * evaluation traffic books into ``eval_counters``, never the serving
+    counters.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.api as api_mod
+from repro.core import (
+    ANNConfig,
+    KIND_DELETE,
+    KIND_INSERT,
+    StreamingIndex,
+    apply,
+    available_policies,
+    delete_batch,
+    get_policy,
+    init_index_state,
+    insert_batch,
+    make_dataset,
+    make_update_batch,
+    maybe_consolidate,
+    mixed_update_batch,
+    pad_update_batch,
+    search_index as search,
+)
+from repro.core.types import INVALID
+
+
+CFG = ANNConfig(dim=12, n_cap=160, r=8, l_build=16, l_search=16, l_delete=16,
+                k_delete=10, n_copies=2, alpha=1.2)
+
+
+def _cfg(metric="l2", **kw):
+    return dataclasses.replace(CFG, metric=metric, **kw)
+
+
+def _tree_equal(a, b, path=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def check_id_invariants(istate, cfg):
+    """ext2slot and slot2ext are a device-resident bijection over the live
+    point set; no stale entries survive delete or slot reuse."""
+    g = istate.graph
+    ext2slot = np.asarray(istate.ext2slot)
+    slot2ext = np.asarray(istate.slot2ext)
+    active = np.asarray(g.active)
+    mapped_slots = ext2slot[ext2slot >= 0]
+    # every mapped external id points at a live slot that points back
+    assert len(set(mapped_slots.tolist())) == len(mapped_slots)
+    assert active[mapped_slots].all()
+    for e in np.nonzero(ext2slot >= 0)[0]:
+        assert slot2ext[ext2slot[e]] == e
+    # every live slot is mapped; every non-live slot is unmapped
+    assert (slot2ext[active] >= 0).all()
+    assert (slot2ext[~active] == INVALID).all()
+    assert len(mapped_slots) == int(g.n_active)
+
+
+def _bootstrap(cfg, data, n, policy="ip", max_ext=1000):
+    st = init_index_state(cfg, max_ext)
+    st, res = apply(st, cfg, insert_batch(np.arange(n), data[:n]),
+                    policy=policy, sequential=True)
+    assert np.asarray(res.ok)[:n].all()
+    return st
+
+
+# ---------------------------------------------------------------------------
+# mixed batches == the sequential two-call semantics, lane for lane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["ip", "fresh"])
+@pytest.mark.parametrize("sequential", [True, False])
+def test_mixed_batch_matches_two_calls(policy, sequential):
+    cfg = _cfg()
+    data, _ = make_dataset(120, cfg.dim, n_queries=4, seed=5)
+    base = _bootstrap(cfg, data, 60, policy=policy)
+
+    ins_ext = np.arange(60, 80)
+    del_ext = np.arange(0, 40, 2)
+
+    # mixed batch, kinds interleaved in lane order
+    kind = np.r_[np.full(20, KIND_INSERT), np.full(20, KIND_DELETE)]
+    exts = np.r_[ins_ext, del_ext]
+    vecs = np.r_[data[60:80], np.zeros((20, cfg.dim), np.float32)]
+    interleave = np.arange(40).reshape(2, 20).T.ravel()  # i,d,i,d,...
+    mixed = pad_update_batch(make_update_batch(
+        kind[interleave], exts[interleave], vecs[interleave]
+    ))
+    st_mixed, res_mixed = apply(base, cfg, mixed, policy=policy,
+                                sequential=sequential)
+
+    # two-call path: all inserts, then all deletes
+    st_two, res_i = apply(base, cfg, insert_batch(ins_ext, data[60:80]),
+                          policy=policy, sequential=sequential)
+    st_two, res_d = apply(st_two, cfg, delete_batch(del_ext, cfg.dim),
+                          policy=policy, sequential=sequential)
+    assert np.asarray(res_i.ok)[:20].all()
+    assert np.asarray(res_d.ok)[:20].all()
+
+    _tree_equal(st_mixed, st_two)
+    # lane-for-lane result parity (mixed lane order vs the two calls')
+    slot_m = np.asarray(res_mixed.slot)
+    ok_m = np.asarray(res_mixed.ok)
+    ins_lanes = np.nonzero(np.asarray(mixed.kind) == KIND_INSERT)[0][:20]
+    del_lanes = np.nonzero(np.asarray(mixed.kind) == KIND_DELETE)[0][:20]
+    np.testing.assert_array_equal(slot_m[ins_lanes],
+                                  np.asarray(res_i.slot)[:20])
+    np.testing.assert_array_equal(slot_m[del_lanes],
+                                  np.asarray(res_d.slot)[:20])
+    assert ok_m[ins_lanes].all() and ok_m[del_lanes].all()
+    check_id_invariants(st_mixed, cfg)
+
+
+@pytest.mark.parametrize("sequential", [True, False])
+def test_kind_major_split_layout_matches_interleaved(sequential):
+    """``mixed_update_batch``'s static split is a pure performance layout:
+    the state it produces is identical to an interleaved mixed batch of the
+    same ops (and hence to the two-call path)."""
+    cfg = _cfg()
+    data, _ = make_dataset(120, cfg.dim, n_queries=4, seed=13)
+    base = _bootstrap(cfg, data, 60)
+
+    ins_ext = np.arange(60, 76)
+    del_ext = np.arange(0, 32, 2)
+    batch, split = mixed_update_batch(ins_ext, data[60:76], del_ext, cfg.dim)
+    st_split, res_split = apply(base, cfg, batch, policy="ip",
+                                sequential=sequential, split=split)
+
+    st_two, _ = apply(base, cfg, insert_batch(ins_ext, data[60:76]),
+                      policy="ip", sequential=sequential)
+    st_two, _ = apply(st_two, cfg, delete_batch(del_ext, cfg.dim),
+                      policy="ip", sequential=sequential)
+    _tree_equal(st_split, st_two)
+    ok = np.asarray(res_split.ok)
+    assert ok[:16].all() and ok[split:split + 16].all()
+
+    # misplaced lanes are rejected, not applied out of order
+    bad = batch._replace(
+        kind=batch.kind.at[0].set(KIND_DELETE),
+        ext_id=batch.ext_id.at[0].set(2),
+    )
+    _, res_bad = apply(base, cfg, bad, policy="ip",
+                       sequential=sequential, split=split)
+    assert not np.asarray(res_bad.ok)[0]
+
+
+def test_mixed_batch_can_delete_its_own_insert():
+    """Delete lanes resolve against the post-insert map: one batch may
+    insert an external id and delete it again."""
+    cfg = _cfg()
+    data, _ = make_dataset(40, cfg.dim, n_queries=2, seed=6)
+    st = _bootstrap(cfg, data, 20)
+    batch = pad_update_batch(make_update_batch(
+        [KIND_INSERT, KIND_DELETE],
+        [30, 30],
+        np.stack([data[25], np.zeros(cfg.dim, np.float32)]),
+    ))
+    st, res = apply(st, cfg, batch, policy="ip", sequential=True)
+    ok = np.asarray(res.ok)
+    assert ok[0] and ok[1]
+    assert int(st.ext2slot[30]) == INVALID
+    assert int(st.graph.n_active) == 20
+    check_id_invariants(st, cfg)
+
+
+def test_invalid_lanes_are_rejected_not_applied():
+    cfg = _cfg()
+    data, _ = make_dataset(40, cfg.dim, n_queries=2, seed=7)
+    st = _bootstrap(cfg, data, 20)
+    batch = pad_update_batch(make_update_batch(
+        [KIND_DELETE, KIND_INSERT, KIND_DELETE],
+        [999_999, 2_000_000, 5],   # unknown; out of ext range; valid
+        np.zeros((3, cfg.dim), np.float32),
+    ))
+    st2, res = apply(st, cfg, batch, policy="ip", sequential=True)
+    ok = np.asarray(res.ok)
+    assert not ok[0] and not ok[1] and ok[2]
+    assert int(st2.graph.n_active) == 19
+    check_id_invariants(st2, cfg)
+
+
+# ---------------------------------------------------------------------------
+# external-id lifecycle: delete -> consolidate -> slot reuse
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["ip", "fresh"])
+def test_delete_reinsert_slot_reuse_no_stale_map(policy):
+    cfg = _cfg(n_cap=40)  # tight capacity forces slot reuse
+    data, _ = make_dataset(80, cfg.dim, n_queries=2, seed=8)
+    st = _bootstrap(cfg, data, 40, policy=policy, max_ext=500)
+    assert int(st.graph.free_top) == 0
+
+    st, res = apply(st, cfg, delete_batch(np.arange(0, 30), cfg.dim),
+                    policy=policy, sequential=True)
+    assert np.asarray(res.ok)[:30].all()
+    check_id_invariants(st, cfg)
+    st, did = maybe_consolidate(st, cfg, policy=policy, force=True)
+    assert did and int(st.graph.free_top) == 30
+    check_id_invariants(st, cfg)
+
+    # re-insert fresh external ids into the recycled slots
+    st, res = apply(st, cfg, insert_batch(np.arange(100, 130), data[40:70]),
+                    policy=policy, sequential=True)
+    assert np.asarray(res.ok)[:30].all()
+    check_id_invariants(st, cfg)
+    # the freed slots were reused and carry ONLY the new ids
+    for old in range(0, 30):
+        assert int(st.ext2slot[old]) == INVALID
+    ext, dists, _ = search(st, cfg, data[40:50], k=3)
+    ext = np.asarray(ext)
+    live = set(range(30, 40)) | set(range(100, 130))
+    assert set(ext[ext >= 0].tolist()) <= live, "stale ids served"
+
+
+# ---------------------------------------------------------------------------
+# the compat shell is a pure shim over apply
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["ip", "fresh"])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_streaming_shell_matches_raw_apply(policy, metric):
+    cfg = _cfg(metric)
+    data, queries = make_dataset(150, cfg.dim, n_queries=8, seed=9)
+
+    idx = StreamingIndex(cfg, mode=policy, max_external_id=640)
+    raw = init_index_state(cfg, 640)
+
+    script = [
+        ("insert", np.arange(0, 100), data[:100]),
+        ("delete", np.arange(0, 60, 3), None),
+        ("insert", np.arange(100, 130), data[100:130]),
+        ("delete", np.setdiff1d(np.arange(1, 40, 2), np.arange(0, 60, 3)),
+         None),
+    ]
+    for op, ext, vecs in script:
+        if op == "insert":
+            idx.insert(ext, vecs)
+            raw, res = apply(raw, cfg, insert_batch(ext, vecs),
+                             policy=policy, sequential=True)
+            assert np.asarray(res.ok)[: len(ext)].all()
+        else:
+            idx.delete(ext)
+            raw, res = apply(raw, cfg, delete_batch(ext, cfg.dim),
+                             policy=policy, sequential=True)
+            assert np.asarray(res.ok)[: len(ext)].all()
+            raw, _ = maybe_consolidate(raw, cfg, policy=policy)
+
+    _tree_equal(idx.istate.graph, raw.graph)
+    np.testing.assert_array_equal(idx._ext2slot, np.asarray(raw.ext2slot))
+    np.testing.assert_array_equal(idx._slot2ext, np.asarray(raw.slot2ext))
+    # ...and the two front doors serve identical results
+    ext_a, d_a, _ = idx.search(queries, k=5)
+    ext_b, d_b, _ = search(raw, cfg, queries, k=5, l=cfg.l_search)
+    np.testing.assert_array_equal(ext_a, np.asarray(ext_b))
+    np.testing.assert_array_equal(d_a, np.asarray(d_b))
+    check_id_invariants(idx.istate, cfg)
+
+
+def test_shell_delete_unknown_id_raises():
+    cfg = _cfg()
+    data, _ = make_dataset(30, cfg.dim, n_queries=2, seed=10)
+    idx = StreamingIndex(cfg, max_external_id=100)
+    idx.insert(np.arange(20), data[:20])
+    with pytest.raises(KeyError):
+        idx.delete(np.asarray([55]))
+    # the known ids of a mixed batch apply before the raise (shim contract)
+    with pytest.raises(KeyError):
+        idx.delete(np.asarray([5, 55]))
+    assert idx.n_active == 19
+    assert int(idx.istate.ext2slot[5]) == INVALID
+
+
+def test_shell_rejects_bad_inserts_clearly():
+    cfg = _cfg()
+    data, _ = make_dataset(30, cfg.dim, n_queries=2, seed=10)
+    idx = StreamingIndex(cfg, max_external_id=100)
+    idx.insert(np.arange(10), data[:10])
+    # out-of-range external id: a clear ValueError, not "capacity exhausted"
+    with pytest.raises(ValueError, match="external id"):
+        idx.insert(np.asarray([150]), data[:1])
+    # duplicate ids in one insert batch would race the device map scatter
+    with pytest.raises(ValueError, match="duplicate"):
+        idx.insert(np.asarray([20, 20]), data[:2])
+    # duplicate deletes in one call are deduped, not an error
+    idx.delete(np.asarray([3, 3, 4]))
+    assert idx.n_active == 8
+
+
+# ---------------------------------------------------------------------------
+# bucketing: ragged batches share one compiled program (incl. bootstrap)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_trace_count_bucketed():
+    # unique config so earlier tests cannot have warmed this jit cache
+    cfg = _cfg(n_cap=161)
+    data, _ = make_dataset(60, cfg.dim, n_queries=2, seed=11)
+    idx = StreamingIndex(cfg, max_external_id=300)
+
+    t0 = api_mod.TRACE_COUNTER["apply"]
+    idx.insert(np.arange(0, 5), data[0:5])       # serial bootstrap, bucket 8
+    idx.insert(np.arange(5, 11), data[5:11])     # bucket 8 again
+    idx.insert(np.arange(11, 18), data[11:18])   # bucket 8 again
+    traced_inserts = api_mod.TRACE_COUNTER["apply"] - t0
+    assert traced_inserts == 1, (
+        f"ragged bootstrap inserts should share one bucket-8 program, "
+        f"got {traced_inserts} traces"
+    )
+    # deletes of the same bucket ride the SAME unified program
+    t1 = api_mod.TRACE_COUNTER["apply"]
+    idx.delete(np.arange(0, 3))                  # bucket 4: one new trace
+    idx.delete(np.arange(3, 7))                  # bucket 4 again
+    idx.delete(np.arange(7, 13))                 # bucket 8: shared with inserts
+    traced_deletes = api_mod.TRACE_COUNTER["apply"] - t1
+    assert traced_deletes == 1, (
+        f"expected only the bucket-4 program to trace, got {traced_deletes}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_policy_registry():
+    assert set(available_policies()) >= {"ip", "fresh"}
+    assert get_policy("ip").name == "ip"
+    with pytest.raises(KeyError):
+        get_policy("nope")
+    with pytest.raises(AssertionError):
+        StreamingIndex(CFG, mode="nope", max_external_id=10)
+
+
+# ---------------------------------------------------------------------------
+# evaluation accounting is separate from serving accounting
+# ---------------------------------------------------------------------------
+
+
+def test_eval_traffic_does_not_pollute_serving_counters():
+    cfg = _cfg()
+    data, queries = make_dataset(80, cfg.dim, n_queries=6, seed=12)
+    idx = StreamingIndex(cfg, max_external_id=200)
+    idx.insert(np.arange(80), data)
+
+    idx.search(queries, k=5)
+    serve_q = idx.counters.n_queries
+    serve_comps = idx.counters.search_comps
+    serve_s = idx.counters.search_s
+    assert serve_q == 6 and serve_comps > 0
+
+    idx.recall(queries, k=5)
+    assert idx.counters.n_queries == serve_q
+    assert idx.counters.search_comps == serve_comps
+    assert idx.counters.search_s == serve_s
+    assert idx.eval_counters.n_queries == 6
+    assert idx.eval_counters.search_comps > 0
+    assert idx.eval_counters.search_s > 0

@@ -1,10 +1,17 @@
 """Sharded fan-out index over 8 placeholder devices (subprocess — the main
-test process must keep seeing exactly 1 device)."""
+test process must keep seeing exactly 1 device).
+
+Since the ``core/api.py`` redesign the sharded index has external-id
+insert/delete/search semantics through the same unified ``apply`` front
+door as ``StreamingIndex``; the subprocess script exercises that path end
+to end (insert by ext id, search returns ext ids, delete by ext id, legacy
+``delete_slots`` shim)."""
 import os
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -26,27 +33,35 @@ SCRIPT = textwrap.dedent("""
     slots, owners = idx.insert(ext, data)
     assert (slots >= 0).all(), "insert failed on some shard"
 
-    # recall vs exact brute force over the whole corpus
+    # recall vs exact brute force over the whole corpus — results are
+    # external ids straight off the device-resident slot2ext maps
     ids, shards, dists, comps = idx.search(queries, k=10, l=32)
-    slot_key = {(int(o), int(s)): int(e) for e, s, o in zip(ext, slots, owners)}
     d = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1)
     exact = np.argsort(d, axis=1)[:, :10]
     hits = 0
     for qi in range(len(queries)):
-        found = {slot_key.get((int(sh), int(sl)), -1)
-                 for sh, sl in zip(shards[qi], ids[qi])}
-        hits += len(found.intersection(exact[qi].tolist()))
+        hits += len(set(ids[qi].tolist()).intersection(exact[qi].tolist()))
     recall = hits / (len(queries) * 10)
     assert recall >= 0.9, f"sharded recall too low: {recall}"
 
-    # deletes are routed to the owning shard and disappear from results
+    # deletes are routed by external id to the owning shard and disappear
     drop = ext[:200]
-    idx.delete_slots(slots[:200], owners[:200])
-    ids2, shards2, _, _ = idx.search(queries, k=10, l=32)
-    for qi in range(len(queries)):
-        found = {slot_key.get((int(sh), int(sl)), -1)
-                 for sh, sl in zip(shards2[qi], ids2[qi])}
-        assert not found.intersection(set(drop.tolist()))
+    idx.delete(drop)
+    ids2, _, _, _ = idx.search(queries, k=10, l=32)
+    assert not set(ids2.ravel().tolist()).intersection(set(drop.tolist()))
+
+    # the pre-external-id shim still works, int32-clean
+    idx.delete_slots(slots[200:220], owners[200:220])
+    ids3, _, _, _ = idx.search(queries, k=10, l=32)
+    assert not set(ids3.ravel().tolist()).intersection(
+        set(ext[200:220].tolist()))
+
+    # unknown external id raises, nothing corrupted
+    try:
+        idx.delete(np.asarray([200]))  # already deleted
+        raise SystemExit("expected KeyError")
+    except KeyError:
+        pass
     print("OK recall=%.3f comps=%d" % (recall, comps))
 """)
 
@@ -65,8 +80,6 @@ def test_sharded_index_subprocess():
 
 
 def test_route_is_stable_and_balanced():
-    import numpy as np
-
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     sys.path.insert(0, os.path.join(REPO, "src"))
     from repro.core.distributed import ShardedIndex
@@ -80,3 +93,40 @@ def test_route_is_stable_and_balanced():
     np.testing.assert_array_equal(owners, again)
     counts = np.bincount(owners, minlength=8)
     assert counts.min() > 0.7 * counts.mean()
+
+
+def test_large_ids_survive_update_payload():
+    """Regression: the old ``delete_slots`` routed slot ids through a
+    ``jnp.float32`` payload, which rounds integers above 2**24.  The unified
+    op stream carries int32 end to end; ids beyond the float32-exact range
+    must survive exactly."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.distributed import as_int_payload
+
+    big = np.asarray([2**24 + 1, 2**24 + 3, 2**30 + 7])
+    # the old float32 routing demonstrably corrupted these ids
+    assert int(np.float32(big[0])) != int(big[0])
+    out = np.asarray(as_int_payload(big))
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(out, big)
+    # beyond int32 must fail loudly, not wrap
+    with pytest.raises(OverflowError):
+        as_int_payload(np.asarray([2**31]))
+
+
+def test_route_accepts_large_external_ids():
+    """Hash routing is int64 host math: external ids above 2**24 route
+    stably and identically to their exact integer value."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.distributed import ShardedIndex
+
+    class Fake:
+        n_shards = 8
+    big = np.asarray([2**24 + 1, 2**24 + 2, 2**28 + 5])
+    owners = ShardedIndex.route(Fake, big)
+    # float32 rounding would collapse 2**24+1 onto 2**24 (a different hash)
+    corrupted = ShardedIndex.route(Fake, big.astype(np.float32).astype(np.int64))
+    assert (owners == ShardedIndex.route(Fake, big)).all()
+    assert not (owners == corrupted).all()
