@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--n", type=int, default=2000)
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--segmented", action="store_true",
+                    help="replay via whole-segment compiled streams "
+                         "(one dispatch per (T, B) bucket)")
     args = ap.parse_args()
 
     kw = dict(n=args.n, dim=args.dim, seed=0)
@@ -39,7 +42,8 @@ def main():
         idx = StreamingIndex(cfg, mode=mode, max_external_id=args.n + 1)
         print(f"\n=== {args.runbook} / "
               f"{'IP-DiskANN' if mode == 'ip' else 'FreshDiskANN'} ===")
-        reports[mode] = run_runbook(idx, rb, k=10, eval_every=2, verbose=True)
+        reports[mode] = run_runbook(idx, rb, k=10, eval_every=2,
+                                    segmented=args.segmented, verbose=True)
 
     print("\nsummary:")
     for mode, rep in reports.items():

@@ -30,9 +30,10 @@ echo "== batched search engine (BENCH_search.json) =="
 python -m benchmarks.search_bench --smoke --out BENCH_search.json
 cat BENCH_search.json
 
-echo "== unified update stream (BENCH_update.json) =="
-# --smoke also enforces the gate: unified apply <= old two-dispatch path
-# (aggregate across batch sizes, 10% slack for 1-core timing noise)
+echo "== update streams: two-dispatch vs unified vs segment (BENCH_update.json) =="
+# --smoke enforces, per batch size: unified apply <= two-dispatch * 1.10
+# (10% slack for 1-core timing noise), and apply_segment updates/s >=
+# per-op apply over the T>=16, B>=64 streams in aggregate
 python -m benchmarks.update_bench --smoke --out BENCH_update.json
 cat BENCH_update.json
 

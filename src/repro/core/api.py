@@ -19,7 +19,14 @@ functional surface:
     ids back to external ids on device;
   * ``UpdatePolicy`` replaces the old ``mode="ip"/"fresh"`` strings with a
     registered object (mirroring the ``DistanceBackend`` registry) that owns
-    the delete strategy and the consolidation trigger.
+    the delete strategy and the consolidation trigger — the trigger is a
+    device-side predicate over the counters carried in ``IndexState``, so
+    compiled streams never sync to host to decide;
+  * ``apply_segment(state, cfg, ops)`` is the whole-segment compiled
+    stream: ``lax.scan`` of the ``apply`` body over a (T, B) op tensor —
+    one dispatch for T ops, the ip policy's consolidation sweep running
+    under ``lax.cond`` mid-segment.  ``plan_segments``/``run_segments``
+    chop an arbitrary op stream into bucket-padded segments.
 
 Semantics (pinned lane-for-lane by ``tests/test_api.py``): a mixed batch
 applies all insert lanes first (in lane order), then all delete lanes (in
@@ -31,21 +38,24 @@ lane's writes — the bootstrap regime); ``sequential=False`` runs the
 relaxed-visibility batched phases (searches of a kind see the graph as of
 that phase's start — the paper's multi-threaded regime).
 
-Both front doors donate their state argument cleanly: every caller that
-drops its old handle (``state, res = apply(state, cfg, batch)``) lets XLA
-update the multi-MB graph buffers in place.
+Both update front doors DONATE their state argument
+(``donate_argnums=0``): every caller that drops its old handle
+(``state, res = apply(state, cfg, batch)``) lets XLA update the multi-MB
+graph buffers in place instead of reallocating them per step.  The old
+handle is dead after the call — ``clone_state`` first if it must survive.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .batched import insert_many_batched, ip_delete_many_batched
-from .consolidate import fresh_consolidate, light_consolidate
+from .consolidate import consolidation_due, fresh_consolidate, light_consolidate
 from .delete import ip_delete_many, lazy_delete_many
 from .insert import insert_many
 from .search import search_batch
@@ -58,14 +68,29 @@ from .types import (
     ApplyResult,
     GraphState,
     IndexState,
+    SegmentResult,
     UpdateBatch,
     clip_ids,
     init_index_state,
+    noop_update_batch,
+    stack_update_batches,
 )
 
-# Incremented once per trace of ``apply`` (not per call): the bucketing
-# regression tests assert ragged batch sizes share one compiled program.
-TRACE_COUNTER = {"apply": 0}
+# Incremented once per trace of ``apply``/``apply_segment`` (not per call):
+# the bucketing regression tests assert ragged batch sizes — and ragged
+# segment lengths — share one compiled program per bucket.
+TRACE_COUNTER = {"apply": 0, "apply_segment": 0}
+
+
+def clone_state(state):
+    """A deep on-device copy of a state pytree.
+
+    The jitted front doors (``apply``, ``apply_segment``,
+    ``consolidate_if_needed``) DONATE their state argument: XLA reuses the
+    multi-MB graph buffers in place and the caller's input handle is dead
+    after the call.  Callers that must keep the pre-update handle (parity
+    tests, benchmarks replaying one start state) clone it first."""
+    return jax.tree.map(jnp.copy, state)
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +108,12 @@ class UpdatePolicy:
     """
 
     name = "abstract"
+    # True when ``consolidate`` is a pure jittable GraphState -> GraphState
+    # pass: compiled update streams then run it under ``lax.cond`` right at
+    # the trigger point.  False (fresh): the pass is host-orchestrated, so
+    # streams only surface a ``needs_consolidation`` flag and the host runs
+    # it between segments.
+    device_consolidation = False
 
     def delete_many(self, graph: GraphState, cfg: ANNConfig, ps,
                     *, sequential: bool):
@@ -92,15 +123,22 @@ class UpdatePolicy:
 
     def should_consolidate(self, cfg: ANNConfig, n_active: int,
                            n_pending: int) -> bool:
-        """Host-side trigger: consolidate once pending removals exceed the
-        configured fraction of the live set."""
+        """Host-side trigger (legacy shells): consolidate once pending
+        removals exceed the configured fraction of the live set."""
         if n_pending == 0:
             return False
         return n_pending > cfg.consolidation_threshold * max(n_active, 1)
 
+    def should_consolidate_device(self, cfg: ANNConfig,
+                                  graph: GraphState) -> jax.Array:
+        """The same trigger as a traced bool scalar over the device-resident
+        counters — no host sync, so ``lax.scan`` streams can branch on it."""
+        return consolidation_due(graph, cfg)
+
     def consolidate(self, graph: GraphState, cfg: ANNConfig) -> GraphState:
-        """The policy's consolidation pass (host-callable; the FreshDiskANN
-        baseline's Algorithm 4 is host-orchestrated by design)."""
+        """The policy's consolidation pass.  Jittable when
+        ``device_consolidation`` (ip: Algorithm 6); host-orchestrated
+        otherwise (fresh: Algorithm 4 is the paper's offline pass)."""
         raise NotImplementedError
 
 
@@ -135,7 +173,10 @@ def get_policy(name: str) -> UpdatePolicy:
 @register_policy("ip")
 class IPDiskANNPolicy(UpdatePolicy):
     """The paper's contribution: in-place deletes (Alg 5), quarantined slots
-    released by the lightweight Alg 6 sweep (no distance computations)."""
+    released by the lightweight Alg 6 sweep (no distance computations).
+    The sweep is pure device code, so compiled streams run it inline."""
+
+    device_consolidation = True
 
     def delete_many(self, graph, cfg, ps, *, sequential):
         fn = ip_delete_many if sequential else ip_delete_many_batched
@@ -243,42 +284,17 @@ def mixed_update_batch(ins_ext, ins_vectors, del_ext, dim: int):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "policy", "sequential", "split")
-)
-def apply(
+def _apply_impl(
     state: IndexState,
     cfg: ANNConfig,
     batch: UpdateBatch,
-    *,
-    policy: str = "ip",
-    sequential: bool = False,
-    split: Optional[int] = None,
+    pol: UpdatePolicy,
+    sequential: bool,
+    split: Optional[int],
 ):
-    """Apply one mixed insert+delete ``UpdateBatch``; returns
-    ``(IndexState, ApplyResult)``.
-
-    All insert lanes apply first (lane order), then all delete lanes (lane
-    order), deletes resolving against the post-insert id map — the exact
-    semantics of the old two-call sequence, in one compiled program.  Lanes
-    whose ``valid`` is False, whose external id is out of range, or (for
-    deletes) unmapped, are no-ops with ``ok=False``.  Re-inserting a mapped
-    external id rebinds it and clears the stale ``slot2ext`` entry of the
-    previous slot (which stays occupied until deleted).  External ids must
-    be unique per kind within one batch: duplicate insert lanes race in the
-    id-map scatter (undefined winner; ``insert_batch`` rejects them on
-    host), and of duplicate delete lanes only the first applies (the rest
-    report ``ok=False``).
-
-    ``split`` is a static layout hint for kind-major batches (see
-    ``mixed_update_batch``): insert lanes live in ``[0, split)`` and delete
-    lanes in ``[split, B)``, so each internal phase runs only over its own
-    lane range.  It never changes semantics — insert-kind lanes at or past
-    ``split`` (and delete-kind lanes before it) are rejected with
-    ``ok=False`` rather than silently applied out of order.
-    """
-    TRACE_COUNTER["apply"] += 1
-    pol = get_policy(policy)
+    """The traced ``apply`` body, shared verbatim by the per-op front door
+    and the ``lax.scan`` step of ``apply_segment`` (segment-vs-loop parity
+    is bit parity because this IS the same program)."""
     b = batch.kind.shape[0]
     e_cap = state.ext2slot.shape[0]
     ext_ok = (batch.ext_id >= 0) & (batch.ext_id < e_cap)
@@ -369,6 +385,299 @@ def apply(
     return new_state, result
 
 
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "policy", "sequential", "split"),
+    donate_argnums=0,
+)
+def apply(
+    state: IndexState,
+    cfg: ANNConfig,
+    batch: UpdateBatch,
+    *,
+    policy: str = "ip",
+    sequential: bool = False,
+    split: Optional[int] = None,
+):
+    """Apply one mixed insert+delete ``UpdateBatch``; returns
+    ``(IndexState, ApplyResult)``.
+
+    All insert lanes apply first (lane order), then all delete lanes (lane
+    order), deletes resolving against the post-insert id map — the exact
+    semantics of the old two-call sequence, in one compiled program.  Lanes
+    whose ``valid`` is False, whose external id is out of range, or (for
+    deletes) unmapped, are no-ops with ``ok=False``.  Re-inserting a mapped
+    external id rebinds it and clears the stale ``slot2ext`` entry of the
+    previous slot (which stays occupied until deleted).  External ids must
+    be unique per kind within one batch: duplicate insert lanes race in the
+    id-map scatter (undefined winner; ``insert_batch`` rejects them on
+    host), and of duplicate delete lanes only the first applies (the rest
+    report ``ok=False``).
+
+    ``split`` is a static layout hint for kind-major batches (see
+    ``mixed_update_batch``): insert lanes live in ``[0, split)`` and delete
+    lanes in ``[split, B)``, so each internal phase runs only over its own
+    lane range.  It never changes semantics — insert-kind lanes at or past
+    ``split`` (and delete-kind lanes before it) are rejected with
+    ``ok=False`` rather than silently applied out of order.
+
+    The ``state`` argument is DONATED: XLA writes the new graph into the
+    input's buffers, so the caller's old handle is dead after the call.
+    Rebind it (``state, res = apply(state, ...)``) or ``clone_state`` first.
+    """
+    TRACE_COUNTER["apply"] += 1
+    return _apply_impl(state, cfg, batch, get_policy(policy), sequential,
+                       split)
+
+
+# ---------------------------------------------------------------------------
+# Device-side consolidation trigger
+# ---------------------------------------------------------------------------
+
+
+def device_sweep(graph: GraphState, cfg: ANNConfig, pol: UpdatePolicy,
+                 trig: jax.Array) -> GraphState:
+    """Run ``pol``'s device consolidation pass under ``lax.cond`` when the
+    traced ``trig`` scalar is set.  THE one cond site every device-trigger
+    path shares (per-op ``consolidate_if_needed``, the segment scan, the
+    sharded per-op update) — so trigger semantics cannot diverge."""
+    return jax.lax.cond(
+        trig, lambda g: pol.consolidate(g, cfg), lambda g: g, graph
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "policy", "force"), donate_argnums=0
+)
+def consolidate_if_needed(
+    state: IndexState, cfg: ANNConfig, *, policy: str = "ip",
+    force: bool = False,
+):
+    """One fused device step: evaluate the policy's consolidation trigger
+    over the counters carried in ``state`` and, if it fires, run the
+    device-side pass under ``lax.cond`` — no host round-trip anywhere.
+
+    Returns ``(IndexState, did: bool[])`` with ``did`` still on device.
+    Only policies with ``device_consolidation`` (ip) qualify; the
+    host-orchestrated fresh baseline goes through ``maybe_consolidate``.
+    ``state`` is donated.
+    """
+    pol = get_policy(policy)
+    if not pol.device_consolidation:
+        raise ValueError(
+            f"policy {policy!r} consolidates on host; use maybe_consolidate"
+        )
+    if force:
+        trig = state.graph.n_pending > 0
+    else:
+        trig = pol.should_consolidate_device(cfg, state.graph)
+    return state._replace(
+        graph=device_sweep(state.graph, cfg, pol, trig)
+    ), trig
+
+
+# ---------------------------------------------------------------------------
+# Whole-segment compiled update streams
+# ---------------------------------------------------------------------------
+
+
+def segment_scan(
+    state: IndexState,
+    cfg: ANNConfig,
+    ops: UpdateBatch,
+    pol: UpdatePolicy,
+    sequential: bool,
+    split: Optional[int],
+    consolidate: bool = True,
+    unroll: int = 1,
+):
+    """The traced body of ``apply_segment``: ``lax.scan`` of the per-op
+    ``apply`` body over a (T, B) op tensor, with the consolidation trigger
+    evaluated on device after every op.  Shared with the sharded index's
+    segment path (which runs it under ``shard_map``).
+
+    ``consolidate=False`` drops the trigger from the compiled stream
+    entirely (flags stay False): on CPU the ``lax.cond`` makes XLA copy the
+    graph carry every step even when the sweep never fires, so callers that
+    own consolidation elsewhere — or deliberately exclude it, like the
+    update benchmark's parity paths — opt out statically.
+
+    ``unroll``: ``lax.scan`` unroll factor.  A compiled stream can fuse
+    ACROSS op boundaries — something per-op dispatch can never do — and
+    unrolling a few ops per loop iteration is what unlocks it (measured
+    ~5% at unroll=4, ~9% at unroll=16 on the update bench's B=256 stream).
+    The trade is compile time, which grows with the unrolled body; 1 keeps
+    compiles identical to the per-op program."""
+
+    def body(st: IndexState, op: UpdateBatch):
+        st, res = _apply_impl(st, cfg, op, pol, sequential, split)
+        consolidated = needs = jnp.bool_(False)
+        if consolidate:
+            trig = pol.should_consolidate_device(cfg, st.graph)
+            if pol.device_consolidation:
+                st = st._replace(
+                    graph=device_sweep(st.graph, cfg, pol, trig)
+                )
+                consolidated = trig
+            else:
+                needs = trig
+        return st, SegmentResult(
+            slot=res.slot, ok=res.ok, n_comps=res.n_comps,
+            consolidated=consolidated, needs_consolidation=needs,
+        )
+
+    return jax.lax.scan(body, state, ops, unroll=unroll)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "policy", "sequential", "split", "consolidate", "unroll"
+    ),
+    donate_argnums=0,
+)
+def apply_segment(
+    state: IndexState,
+    cfg: ANNConfig,
+    ops: UpdateBatch,
+    *,
+    policy: str = "ip",
+    sequential: bool = False,
+    split: Optional[int] = None,
+    consolidate: bool = True,
+    unroll: int = 1,
+):
+    """Run a whole update-stream segment — an ``UpdateBatch`` with a leading
+    (T,) op axis — as ONE compiled program: ``lax.scan`` of the ``apply``
+    body, one dispatch for T ops instead of T dispatches.
+
+    Returns ``(IndexState, SegmentResult)`` with per-op stacked lanes.  Op
+    ``t``'s semantics are exactly ``apply(state_t, cfg, ops[t], ...)``
+    followed by the policy's consolidation trigger:
+
+      * device policies (ip) run ``light_consolidate`` under ``lax.cond``
+        the moment the trigger fires — mid-segment, no host involvement;
+      * host policies (fresh) surface ``needs_consolidation[t]`` and the
+        host consolidates between segments (``run_segments`` does this),
+        which is where the scan cleanly splits at trigger points.
+
+    ``split`` is the same static kind-major layout hint as ``apply``,
+    applied to every op in the segment (``plan_segments`` builds segments
+    with one common split).  One program compiles per (T, B[, split])
+    bucket — pad the op axis with ``noop_update_batch`` steps (masked lanes
+    are no-ops) so ragged segment lengths share buckets.
+
+    ``consolidate=False`` statically drops the per-op trigger from the
+    stream, and ``unroll > 1`` trades compile time for fusion across op
+    boundaries (see ``segment_scan`` for both).
+
+    ``state`` is donated, as with ``apply``.
+    """
+    TRACE_COUNTER["apply_segment"] += 1
+    return segment_scan(state, cfg, ops, get_policy(policy), sequential,
+                        split, consolidate, unroll)
+
+
+class Segment(NamedTuple):
+    """One bucket-padded op tensor of a ``SegmentPlan``."""
+
+    ops: UpdateBatch        # (T_bucket, B) stacked lanes
+    split: Optional[int]    # common kind-major split of every op (or None)
+    n_ops: int              # real ops; ops[n_ops:] are all-masked padding
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """A runbook chopped into compiled-stream segments.
+
+    ``plan_segments`` groups consecutive same-shape ops, pads each group's
+    op axis to a power-of-two bucket (masked no-op steps) and caps groups at
+    ``max_t`` — so an arbitrary stream of mixed batch shapes executes with
+    one dispatch per segment and one compilation per (T_bucket, B, split)
+    bucket."""
+
+    segments: tuple  # tuple[Segment, ...]
+
+    @property
+    def n_ops(self) -> int:
+        return sum(s.n_ops for s in self.segments)
+
+
+def plan_segments(
+    steps,
+    *,
+    splits=None,
+    max_t: int = 64,
+) -> SegmentPlan:
+    """Chop a list of same-or-mixed-width ``UpdateBatch``es into
+    ``Segment``s.  ``splits``: optional per-step static split (one per
+    step; consecutive steps only share a segment when their (B, split)
+    agree).  ``max_t``: segment length cap (a power of two keeps T buckets
+    trivially aligned)."""
+    steps = list(steps)
+    if splits is None:
+        splits = [None] * len(steps)
+    if len(splits) != len(steps):
+        raise ValueError("one split per step required")
+    max_t = max(1, max_t)
+
+    segments = []
+    i = 0
+    while i < len(steps):
+        b = steps[i].kind.shape[0]
+        dim = steps[i].vector.shape[1]
+        split = splits[i]
+        j = i
+        while (
+            j < len(steps)
+            and j - i < max_t
+            and steps[j].kind.shape[0] == b
+            and steps[j].vector.shape[1] == dim
+            and splits[j] == split
+        ):
+            j += 1
+        group = steps[i:j]
+        t_bucket = min(next_bucket(len(group)), next_bucket(max_t))
+        group = group + [
+            noop_update_batch(b, dim) for _ in range(t_bucket - len(group))
+        ]
+        segments.append(
+            Segment(stack_update_batches(group), split, j - i)
+        )
+        i = j
+    return SegmentPlan(segments=tuple(segments))
+
+
+def run_segments(
+    state: IndexState,
+    cfg: ANNConfig,
+    plan: SegmentPlan,
+    *,
+    policy: str = "ip",
+    sequential: bool = False,
+    unroll: int = 1,
+):
+    """Execute a ``SegmentPlan``, threading the carry state across segments.
+
+    Device policies (ip) never touch the host inside the loop; for host
+    policies (fresh) each segment's ``needs_consolidation`` flags are
+    checked at the segment boundary and the policy's host pass runs there.
+    Returns ``(state, [SegmentResult, ...])`` (one result per segment; the
+    caller slices ``[:n_ops]`` rows via the plan)."""
+    pol = get_policy(policy)
+    results = []
+    for seg in plan.segments:
+        state, res = apply_segment(
+            state, cfg, seg.ops, policy=policy, sequential=sequential,
+            split=seg.split, unroll=unroll,
+        )
+        if not pol.device_consolidation and bool(
+            np.asarray(res.needs_consolidation).any()
+        ):
+            state = state._replace(graph=pol.consolidate(state.graph, cfg))
+        results.append(res)
+    return state, results
+
+
 # ---------------------------------------------------------------------------
 # The query front door
 # ---------------------------------------------------------------------------
@@ -397,9 +706,20 @@ def maybe_consolidate(
     state: IndexState, cfg: ANNConfig, *, policy: str = "ip",
     force: bool = False,
 ) -> tuple[IndexState, bool]:
-    """Run the policy's consolidation pass if its trigger fires (host-side
-    decision, as consolidation is the paper's offline/background activity)."""
+    """Run the policy's consolidation pass if its trigger fires.
+
+    Device policies (ip) route through ``consolidate_if_needed`` — the
+    trigger AND the pass execute in one fused program, and the only host
+    sync left is the returned ``did`` bool (this legacy shell contract;
+    compiled streams via ``apply_segment`` avoid even that).  Host policies
+    (fresh) keep the host-side decision: consolidation is the paper's
+    offline/background activity there."""
     pol = get_policy(policy)
+    if pol.device_consolidation:
+        state, did = consolidate_if_needed(
+            state, cfg, policy=policy, force=force
+        )
+        return state, bool(did)
     n_active = int(state.graph.n_active)
     n_pending = int(state.graph.n_pending)
     if not (force and n_pending > 0) and not pol.should_consolidate(
@@ -411,9 +731,15 @@ def maybe_consolidate(
 
 __all__ = [
     "TRACE_COUNTER",
+    "Segment",
+    "SegmentPlan",
     "UpdatePolicy",
     "apply",
+    "apply_segment",
     "available_policies",
+    "clone_state",
+    "consolidate_if_needed",
+    "device_sweep",
     "delete_batch",
     "get_policy",
     "init_index_state",
@@ -422,6 +748,9 @@ __all__ = [
     "maybe_consolidate",
     "mixed_update_batch",
     "pad_update_batch",
+    "plan_segments",
     "register_policy",
+    "run_segments",
     "search",
+    "segment_scan",
 ]

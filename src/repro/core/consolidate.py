@@ -30,6 +30,20 @@ from .types import (
 )
 
 
+def consolidation_due(state: GraphState, cfg: ANNConfig) -> jax.Array:
+    """Device-side consolidation trigger: a traced bool scalar over the
+    pending/active counters carried in ``GraphState``.  This is the same
+    predicate the old host-side ``UpdatePolicy.should_consolidate`` computed
+    from synced ints — expressed on device so compiled update streams
+    (``core/api.py::apply_segment``) can branch on it under ``lax.cond``
+    without a per-op host round-trip."""
+    n_active = jnp.maximum(state.n_active, 1).astype(jnp.float32)
+    return (state.n_pending > 0) & (
+        state.n_pending.astype(jnp.float32)
+        > cfg.consolidation_threshold * n_active
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def light_consolidate(state: GraphState, cfg: ANNConfig) -> GraphState:
     """Algorithm 6: remove dangling edges, free quarantined slots."""

@@ -41,7 +41,15 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .api import apply, delete_batch, insert_batch
+from .api import (
+    apply,
+    delete_batch,
+    device_sweep,
+    get_policy,
+    insert_batch,
+    plan_segments,
+    segment_scan,
+)
 from .search_batched import batched_greedy_search
 from .types import INVALID, ANNConfig, IndexState, clip_ids, init_index_state
 
@@ -82,6 +90,7 @@ class ShardedIndex:
         )
         self._search = self._build_search()
         self._update = self._build_update()
+        self._update_segment = self._build_update_segment()
 
     # -- SPMD programs -------------------------------------------------------
 
@@ -132,7 +141,7 @@ class ShardedIndex:
     def _build_update(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
 
-        @jax.jit
+        @functools.partial(jax.jit, donate_argnums=0)
         def update(states, batch, owners):
             """batch: a replicated ``UpdateBatch``; owners: i32[B] owning
             shard of each lane.  Every shard runs the same unified ``apply``
@@ -146,6 +155,15 @@ class ShardedIndex:
                 state, res = apply(
                     state, cfg, mine, policy=policy, sequential=True
                 )
+                # device-side consolidation trigger per op, exactly as the
+                # segment path and StreamingIndex: each shard sweeps when
+                # ITS pending/active counters cross the threshold
+                pol = get_policy(policy)
+                if pol.device_consolidation:
+                    trig = pol.should_consolidate_device(cfg, state.graph)
+                    state = state._replace(
+                        graph=device_sweep(state.graph, cfg, pol, trig)
+                    )
                 return (
                     jax.tree.map(lambda x: x[None], state),
                     jax.tree.map(lambda x: x[None], res),
@@ -159,6 +177,41 @@ class ShardedIndex:
             )(states, batch, owners)
 
         return update
+
+    def _build_update_segment(self):
+        cfg, axis, policy = self.cfg, self.axis, self.policy
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def update_segment(states, ops, owners):
+            """ops: a replicated (T, B) op tensor; owners: i32[T, B] owning
+            shard per lane per op.  Every shard runs the same compiled
+            ``lax.scan`` of the ``apply`` body (core/api.py::segment_scan)
+            with non-owned lanes masked invalid — T ops, ONE dispatch,
+            per-shard serial semantics, device-side consolidation trigger
+            per op (the ip policy's light sweep fires mid-segment on
+            whichever shard's counters cross the threshold)."""
+
+            def shard_fn(state, ops, owners):
+                state = jax.tree.map(lambda x: x[0], state)
+                me = lax.axis_index(axis)
+                mine = ops._replace(valid=ops.valid & (owners == me))
+                state, res = segment_scan(
+                    state, cfg, mine, get_policy(policy),
+                    sequential=True, split=None,
+                )
+                return (
+                    jax.tree.map(lambda x: x[None], state),
+                    jax.tree.map(lambda x: x[None], res),
+                )
+
+            return shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(axis), P(), P()),
+                out_specs=(P(axis), P(axis)),
+                check_rep=False,
+            )(states, ops, owners)
+
+        return update_segment
 
     # -- host API -------------------------------------------------------------
 
@@ -233,6 +286,51 @@ class ShardedIndex:
             self.states, batch,
             as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
         )
+
+    def update_stream(self, batches, *, max_t: int = 64):
+        """Run a stream of ``UpdateBatch``es as whole-segment compiled
+        scans under ``shard_map`` — one dispatch per (T, B) bucket instead
+        of one per batch.  Bucketing rides the same ``plan_segments``
+        discipline as the local front doors (consecutive same-width
+        batches share a segment; width changes start a new one).
+
+        Lanes route to their owning shard by external id (same stable hash
+        as ``insert``/``delete``); invalid lanes are no-ops everywhere.
+        Unlike the per-op paths this surface raises no per-id exceptions —
+        a failed lane is visible as ``ok=False`` in the returned
+        per-segment ``SegmentResult`` list (stacked (S, T, B)).
+
+        Host-orchestrated policies (fresh) consolidate at segment
+        boundaries: any shard whose ``needs_consolidation`` flag fired gets
+        its graph gathered, passed through the policy's host pass and
+        scattered back (consolidation is the paper's offline activity —
+        the transfer is off the serving path)."""
+        pol = get_policy(self.policy)
+        plan = plan_segments(batches, max_t=max_t)
+        results = []
+        for seg in plan.segments:
+            owners = np.where(
+                np.asarray(seg.ops.valid),
+                self.route(np.asarray(seg.ops.ext_id, np.int64)), -1,
+            ).astype(np.int32)                          # (T, B)
+            self.states, res = self._update_segment(
+                self.states, seg.ops, as_int_payload(owners)
+            )
+            if not pol.device_consolidation:
+                flags = np.asarray(res.needs_consolidation)   # (S, T)
+                for s in np.nonzero(flags.any(axis=1))[0]:
+                    shard_graph = jax.tree.map(
+                        lambda x: x[s], self.states.graph
+                    )
+                    new_graph = pol.consolidate(shard_graph, self.cfg)
+                    self.states = self.states._replace(
+                        graph=jax.tree.map(
+                            lambda full, g: full.at[s].set(g),
+                            self.states.graph, new_graph,
+                        )
+                    )
+            results.append(res)
+        return results
 
     def search(self, queries, k=10, l=64):
         """Returns (ext_ids (Q, k), owner shards (Q, k), dists (Q, k),

@@ -9,7 +9,7 @@ from typing import List, Optional
 import numpy as np
 
 from .index import StreamingIndex
-from .runbook import Runbook
+from .runbook import Runbook, runbook_update_stream
 from .types import ANNConfig
 
 
@@ -41,6 +41,7 @@ class RunbookReport:
             "avg_recall@10": round(self.avg_recall, 4),
             "insert_s": round(c.insert_s, 3),
             "delete_s": round(c.delete_s, 3),
+            "segment_s": round(c.segment_s, 3),
             "search_s": round(c.search_s, 3),
             "n_consolidations": c.n_consolidations,
         }
@@ -57,40 +58,90 @@ def run_runbook(
     k: int = 10,
     eval_every: int = 1,
     max_steps: Optional[int] = None,
-    update_batch: int = 0,
+    segmented: bool = False,
+    segment_t: int = 32,
     verbose: bool = False,
 ) -> RunbookReport:
+    """Replay ``rb`` against ``index``.
+
+    ``segmented=True`` routes the update stream through the whole-segment
+    compiled path: all runbook steps up to the next eval point become ONE
+    op tensor per (T, B) bucket (``StreamingIndex.apply_segments``), so the
+    device dispatch count drops from per-op to per-segment.  Semantics per
+    op are identical to the per-op path; the fresh policy's host
+    consolidation then lands on segment boundaries instead of per step, and
+    invalid ops (unknown delete ids) are silent no-op lanes rather than
+    exceptions.  Evals fire at exactly the per-op path's steps (0,
+    eval_every, 2*eval_every, ...) — window boundaries are placed so each
+    eval sees precisely the same applied prefix, keeping the two modes'
+    reports comparable point for point.
+
+    Segmented replay only supports the default per-op visibility
+    (``batch_updates=False``): the batched shell's serial-bootstrap
+    heuristic (grow serially until the graph dwarfs the batch) has no
+    segment equivalent yet, and running relaxed visibility from step 0
+    would collapse the early graph.
+    """
+    if segmented and index.batch_updates:
+        raise ValueError(
+            "segmented replay requires batch_updates=False: the batched "
+            "shell's serial-bootstrap windowing is per-op only"
+        )
     metrics: List[StepMetrics] = []
     steps = rb.steps[:max_steps] if max_steps else rb.steps
-    for t, step in enumerate(steps):
-        if len(step.insert_ids):
-            index.insert(step.insert_ids, rb.data[step.insert_ids])
-        if len(step.delete_ids):
-            index.delete(step.delete_ids)
-        do_eval = (t % eval_every == 0) and index.n_active > k
-        if do_eval:
-            # evaluation traffic books into the index's eval counters, never
-            # into the serving counters the report summarises
-            t0 = time.perf_counter()
-            comps0 = index.eval_counters.search_comps
-            r = index.recall(rb.queries, k=k)
-            dt = time.perf_counter() - t0
-            dcomps = index.eval_counters.search_comps - comps0
-            metrics.append(
-                StepMetrics(
-                    step=t,
-                    n_active=index.n_active,
-                    recall=r,
-                    comps_per_query=dcomps / len(rb.queries),
-                    qps=len(rb.queries) / max(dt, 1e-9),
-                )
+
+    def eval_at(t: int) -> None:
+        if index.n_active <= k:
+            return
+        # evaluation traffic books into the index's eval counters, never
+        # into the serving counters the report summarises
+        t0 = time.perf_counter()
+        comps0 = index.eval_counters.search_comps
+        r = index.recall(rb.queries, k=k)
+        dt = time.perf_counter() - t0
+        dcomps = index.eval_counters.search_comps - comps0
+        metrics.append(
+            StepMetrics(
+                step=t,
+                n_active=index.n_active,
+                recall=r,
+                comps_per_query=dcomps / len(rb.queries),
+                qps=len(rb.queries) / max(dt, 1e-9),
             )
-            if verbose:
-                m = metrics[-1]
-                print(
-                    f"[{rb.name}:{index.mode}] step {t:4d} active={m.n_active:6d} "
-                    f"recall@{k}={m.recall:.3f} comps/q={m.comps_per_query:.0f}"
-                )
+        )
+        if verbose:
+            m = metrics[-1]
+            print(
+                f"[{rb.name}:{index.mode}] step {t:4d} active={m.n_active:6d} "
+                f"recall@{k}={m.recall:.3f} comps/q={m.comps_per_query:.0f}"
+            )
+
+    if segmented:
+        # each window rides ONE compiled stream; boundaries replicate the
+        # per-op eval cadence exactly (step 0 evals first, then every
+        # eval_every-th step), so the first window is a single step and
+        # later windows are eval_every steps
+        t = 0
+        while t < len(steps):
+            width = 1 if t == 0 else eval_every
+            window = steps[t : t + width]
+            batches, splits = runbook_update_stream(rb, window)
+            # sequential: the per-op shell's visibility mode at
+            # batch_updates=False (guarded above)
+            index.apply_segments(batches, splits=splits, max_t=segment_t,
+                                 sequential=True)
+            t_last = t + len(window) - 1
+            if t_last % eval_every == 0:
+                eval_at(t_last)
+            t += len(window)
+    else:
+        for t, step in enumerate(steps):
+            if len(step.insert_ids):
+                index.insert(step.insert_ids, rb.data[step.insert_ids])
+            if len(step.delete_ids):
+                index.delete(step.delete_ids)
+            if t % eval_every == 0:
+                eval_at(t)
     evald = [m for m in metrics if m.step >= rb.eval_from]
     avg = float(np.mean([m.recall for m in evald])) if evald else float("nan")
     return RunbookReport(

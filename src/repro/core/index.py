@@ -19,6 +19,12 @@ Deprecation shims for the pre-handle API:
   * ``._ext2slot`` / ``._slot2ext`` — read-only numpy views of the
     device-resident maps (the old host arrays are gone).
 
+Donation caveat: the jitted front doors donate their ``IndexState``, so
+each update invalidates the PREVIOUS handle's buffers.  The shims are safe
+— every property re-reads the live ``self.istate`` — but callers must not
+hold raw ``GraphState``/array references across an update (take
+``np.asarray`` copies, or ``core.api.clone_state``, instead).
+
 Evaluation traffic (``recall``) books into ``eval_counters``, never into
 the serving ``counters`` — so runbook reports reflect serving load only.
 """
@@ -38,6 +44,8 @@ from .api import (
     init_index_state,
     insert_batch,
     maybe_consolidate,
+    plan_segments,
+    run_segments,
     search,
 )
 from .recall import brute_force_topk, recall_at_k
@@ -53,6 +61,7 @@ class OpCounters:
 
     insert_s: float = 0.0
     delete_s: float = 0.0        # includes consolidation (paper's accounting)
+    segment_s: float = 0.0       # whole-segment compiled streams (mixed ops)
     search_s: float = 0.0
     n_inserts: int = 0
     n_deletes: int = 0
@@ -215,6 +224,53 @@ class StreamingIndex:
                 f"delete of unknown external id(s): "
                 f"{ext_ids[~ok][:8].tolist()}"
             )
+
+    def apply_segments(self, steps, *, splits=None, max_t: int = 64,
+                       sequential: bool = False, unroll: int = 1):
+        """Run a list of ``UpdateBatch`` ops as whole-segment compiled
+        streams: one device dispatch per (T, B)-bucketed segment instead of
+        one per op (``core/api.py::apply_segment``).
+
+        The consolidation trigger is evaluated ON DEVICE after every op:
+        the ip policy's light sweep runs mid-segment under ``lax.cond``;
+        the fresh policy's host pass runs at segment boundaries when any
+        op in the segment raised its ``needs_consolidation`` flag.
+
+        Books wall time into ``counters.segment_s`` and op counts/comps
+        from the device-resident counters (applied ops, not attempted —
+        invalid lanes are silent no-ops here; the per-op ``insert``/
+        ``delete`` paths keep their exception contracts).  Returns the
+        per-segment ``SegmentResult`` list."""
+        plan = plan_segments(steps, splits=splits, max_t=max_t)
+        t0 = time.perf_counter()
+        before = (
+            int(self.istate.n_inserts), int(self.istate.n_deletes),
+            int(self.istate.insert_comps), int(self.istate.delete_comps),
+        )
+        self.istate, results = run_segments(
+            self.istate, self.cfg, plan, policy=self.mode,
+            sequential=sequential, unroll=unroll,
+        )
+        jax.block_until_ready(self.istate.graph.adj)
+        self.counters.segment_s += time.perf_counter() - t0
+        self.counters.n_inserts += int(self.istate.n_inserts) - before[0]
+        self.counters.n_deletes += int(self.istate.n_deletes) - before[1]
+        self.counters.insert_comps += (
+            int(self.istate.insert_comps) - before[2]
+        )
+        self.counters.delete_comps += (
+            int(self.istate.delete_comps) - before[3]
+        )
+        if self.policy.device_consolidation:
+            self.counters.n_consolidations += sum(
+                int(np.asarray(r.consolidated).sum()) for r in results
+            )
+        else:
+            self.counters.n_consolidations += sum(
+                bool(np.asarray(r.needs_consolidation).any())
+                for r in results
+            )
+        return results
 
     def maybe_consolidate(self, force: bool = False) -> bool:
         t0 = time.perf_counter()

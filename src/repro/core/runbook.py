@@ -181,3 +181,35 @@ def make_runbook(kind: str, **kw) -> Runbook:
         "expiration_time": expiration_time_runbook,
         "clustered": clustered_runbook,
     }[kind](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Runbook -> unified op stream (the payload of compiled update segments)
+# ---------------------------------------------------------------------------
+
+
+def step_update_batch(rb: Runbook, step: RunbookStep):
+    """One runbook step as a kind-major ``UpdateBatch``: bucket-padded
+    insert lanes first, bucket-padded delete lanes after.  Returns
+    ``(batch, split)`` — the static split that lets each ``apply`` phase
+    run only over its own lane range."""
+    from .api import mixed_update_batch  # api does not import runbook
+
+    ins = np.asarray(step.insert_ids, np.int64)
+    dim = rb.data.shape[1]
+    return mixed_update_batch(ins, rb.data[ins], step.delete_ids, dim)
+
+
+def runbook_update_stream(rb: Runbook, steps: Optional[List[RunbookStep]]
+                          = None):
+    """A slice of runbook steps as ``(batches, splits)`` lists — the direct
+    input of ``core.api.plan_segments`` / ``StreamingIndex.apply_segments``.
+    Steps with equal insert/delete bucket shapes (the common case: runbook
+    generators emit near-constant step sizes) share one compiled
+    (T, B, split) segment program."""
+    batches, splits = [], []
+    for step in (rb.steps if steps is None else steps):
+        batch, split = step_update_batch(rb, step)
+        batches.append(batch)
+        splits.append(split)
+    return batches, splits

@@ -163,6 +163,39 @@ class ApplyResult(NamedTuple):
     n_comps: jax.Array  # i32[B]  distance computations spent by the lane
 
 
+class SegmentResult(NamedTuple):
+    """Per-step stacked outcome of one ``apply_segment`` call (leading axis
+    ``T`` = ops in the segment; lane axes as in ``ApplyResult``)."""
+
+    slot: jax.Array                # i32[T, B]
+    ok: jax.Array                  # bool[T, B]
+    n_comps: jax.Array             # i32[T, B]
+    consolidated: jax.Array        # bool[T]  device-side pass ran after the op
+    needs_consolidation: jax.Array # bool[T]  trigger fired but the policy is
+                                   #          host-orchestrated (fresh): the
+                                   #          caller consolidates between
+                                   #          segments
+
+
+def stack_update_batches(steps) -> UpdateBatch:
+    """Stack ``T`` same-width ``UpdateBatch``es into one (T, B) op tensor
+    (the payload of ``apply_segment``)."""
+    widths = {s.kind.shape[0] for s in steps}
+    if len(widths) != 1:
+        raise ValueError(f"segment steps must share one lane width: {widths}")
+    return UpdateBatch(*[jnp.stack(arrs) for arrs in zip(*steps)])
+
+
+def noop_update_batch(b: int, dim: int) -> UpdateBatch:
+    """An all-masked ``UpdateBatch`` (T-axis padding for segment buckets)."""
+    return UpdateBatch(
+        kind=jnp.full((b,), KIND_INSERT, jnp.int32),
+        ext_id=jnp.full((b,), INVALID, jnp.int32),
+        vector=jnp.zeros((b, dim), jnp.float32),
+        valid=jnp.zeros((b,), bool),
+    )
+
+
 def init_index_state(
     cfg: ANNConfig, max_external_id: int, dtype=jnp.float32
 ) -> IndexState:

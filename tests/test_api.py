@@ -27,6 +27,7 @@ from repro.core import (
     KIND_INSERT,
     StreamingIndex,
     apply,
+    clone_state,
     available_policies,
     delete_batch,
     get_policy,
@@ -107,7 +108,8 @@ def test_mixed_batch_matches_two_calls(policy, sequential):
     mixed = pad_update_batch(make_update_batch(
         kind[interleave], exts[interleave], vecs[interleave]
     ))
-    st_mixed, res_mixed = apply(base, cfg, mixed, policy=policy,
+    # the front door donates its state argument: clone to replay from base
+    st_mixed, res_mixed = apply(clone_state(base), cfg, mixed, policy=policy,
                                 sequential=sequential)
 
     # two-call path: all inserts, then all deletes
@@ -144,10 +146,10 @@ def test_kind_major_split_layout_matches_interleaved(sequential):
     ins_ext = np.arange(60, 76)
     del_ext = np.arange(0, 32, 2)
     batch, split = mixed_update_batch(ins_ext, data[60:76], del_ext, cfg.dim)
-    st_split, res_split = apply(base, cfg, batch, policy="ip",
+    st_split, res_split = apply(clone_state(base), cfg, batch, policy="ip",
                                 sequential=sequential, split=split)
 
-    st_two, _ = apply(base, cfg, insert_batch(ins_ext, data[60:76]),
+    st_two, _ = apply(clone_state(base), cfg, insert_batch(ins_ext, data[60:76]),
                       policy="ip", sequential=sequential)
     st_two, _ = apply(st_two, cfg, delete_batch(del_ext, cfg.dim),
                       policy="ip", sequential=sequential)
@@ -161,7 +163,7 @@ def test_kind_major_split_layout_matches_interleaved(sequential):
         ext_id=batch.ext_id.at[0].set(2),
     )
     _, res_bad = apply(base, cfg, bad, policy="ip",
-                       sequential=sequential, split=split)
+                       sequential=sequential, split=split)  # last use of base
     assert not np.asarray(res_bad.ok)[0]
 
 

@@ -23,7 +23,7 @@ SCRIPT = textwrap.dedent("""
     import jax, numpy as np
     from repro.configs.ann import test_scale as ann_cfg
     from repro.core.distributed import ShardedIndex
-    from repro.core import make_dataset
+    from repro.core import delete_batch, insert_batch, make_dataset
 
     data, queries = make_dataset(800, 16, n_queries=16, seed=0)
     mesh = jax.make_mesh((8,), ("shard",))
@@ -62,6 +62,21 @@ SCRIPT = textwrap.dedent("""
         raise SystemExit("expected KeyError")
     except KeyError:
         pass
+
+    # whole-segment compiled stream under shard_map: one scanned dispatch
+    # per (T, B) bucket, same owner routing, ok-lanes on exactly one shard
+    new = np.arange(800, 900)
+    segres = idx.update_stream([insert_batch(new[:50], data[:50]),
+                                insert_batch(new[50:], data[50:100])])
+    ok = np.asarray(segres[0].ok)           # (S, T, B)
+    assert ok[:, :, :50].sum(axis=0).all(), "stream insert lane failed"
+    assert (ok[:, :, :50].sum(axis=0) == 1).all(), "lane ok off-owner"
+    ids4, _, _, _ = idx.search(data[:8], k=10, l=32)
+    hits4 = sum(800 + i in ids4[i].tolist() for i in range(8))
+    assert hits4 >= 6, f"stream-inserted points not served: {hits4}/8"
+    idx.update_stream([delete_batch(new, 16)])
+    ids5, _, _, _ = idx.search(queries, k=10, l=32)
+    assert not set(ids5.ravel().tolist()).intersection(set(new.tolist()))
     print("OK recall=%.3f comps=%d" % (recall, comps))
 """)
 

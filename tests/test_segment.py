@@ -1,0 +1,310 @@
+"""Whole-segment compiled update streams (core/api.py::apply_segment).
+
+Pins the segment engine's contracts:
+
+  * ``apply_segment`` is bit-identical, lane for lane and state for state,
+    to a Python loop of per-op ``apply`` + the per-op consolidation trigger
+    — for both policies, both visibility modes, and mixed kind-major
+    batches, including a consolidation trigger firing MID-segment (ip: the
+    device ``lax.cond`` sweep; fresh: the surfaced ``needs_consolidation``
+    flag and the host pass at the segment boundary);
+  * the jitted front doors DONATE their state: the old handle's buffers are
+    dead after a call, while the ``StreamingIndex`` shims keep working
+    because they re-read the live handle;
+  * ragged segment lengths share one compiled program per (T_bucket, B)
+    bucket (``TRACE_COUNTER["apply_segment"]``).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core.api as api_mod
+from repro.core import (
+    ANNConfig,
+    StreamingIndex,
+    apply,
+    apply_segment,
+    clone_state,
+    consolidate_if_needed,
+    consolidation_due,
+    delete_batch,
+    get_policy,
+    init_index_state,
+    insert_batch,
+    make_dataset,
+    mixed_update_batch,
+    plan_segments,
+    run_segments,
+)
+from repro.core.types import INVALID
+
+
+CFG = ANNConfig(dim=12, n_cap=160, r=8, l_build=16, l_search=16, l_delete=16,
+                k_delete=10, n_copies=2, alpha=1.2)
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _bootstrap(cfg, data, n, policy="ip", max_ext=1000):
+    st = init_index_state(cfg, max_ext)
+    st, res = apply(st, cfg, insert_batch(np.arange(n), data[:n]),
+                    policy=policy, sequential=True)
+    assert np.asarray(res.ok)[:n].all()
+    return st
+
+
+def _stream(cfg, data):
+    """A mixed stream whose deletes cross the consolidation threshold
+    mid-stream (50 live points, 30 deletes in rows 1-3)."""
+    return [
+        insert_batch(np.arange(50, 60), data[50:60]),
+        delete_batch(np.arange(0, 10), cfg.dim),
+        delete_batch(np.arange(10, 20), cfg.dim),
+        delete_batch(np.arange(20, 30), cfg.dim),
+        insert_batch(np.arange(60, 70), data[60:70]),
+    ]
+
+
+def _loop_reference(state, cfg, steps, policy, sequential, splits=None):
+    """The per-op path the segment engine must match bit for bit: ``apply``
+    then the policy's per-op trigger (ip: fused device cond; fresh: record
+    the flag, host-consolidate once at the end — exactly where
+    ``run_segments`` consolidates a single-segment plan)."""
+    pol = get_policy(policy)
+    splits = splits or [None] * len(steps)
+    results, flags = [], []
+    for step, split in zip(steps, splits):
+        state, res = apply(state, cfg, step, policy=policy,
+                           sequential=sequential, split=split)
+        results.append(res)
+        if pol.device_consolidation:
+            state, _ = consolidate_if_needed(state, cfg, policy=policy)
+        else:
+            flags.append(bool(consolidation_due(state.graph, cfg)))
+    if not pol.device_consolidation and any(flags):
+        state = state._replace(graph=pol.consolidate(state.graph, cfg))
+    return state, results, flags
+
+
+@pytest.mark.parametrize("policy", ["ip", "fresh"])
+@pytest.mark.parametrize("sequential", [True, False])
+def test_segment_matches_per_op_loop(policy, sequential):
+    cfg = CFG
+    data, _ = make_dataset(120, cfg.dim, n_queries=4, seed=21)
+    base = _bootstrap(cfg, data, 50, policy=policy)
+    steps = _stream(cfg, data)
+
+    ref, ref_results, _ = _loop_reference(
+        clone_state(base), cfg, steps, policy, sequential
+    )
+
+    plan = plan_segments(steps, max_t=8)
+    assert len(plan.segments) == 1 and plan.n_ops == 5
+    seg_st, seg_results = run_segments(
+        base, cfg, plan, policy=policy, sequential=sequential
+    )
+
+    _tree_equal(ref, seg_st)
+    res = seg_results[0]
+    for t, r in enumerate(ref_results):
+        np.testing.assert_array_equal(np.asarray(res.slot)[t],
+                                      np.asarray(r.slot))
+        np.testing.assert_array_equal(np.asarray(res.ok)[t],
+                                      np.asarray(r.ok))
+        np.testing.assert_array_equal(np.asarray(res.n_comps)[t],
+                                      np.asarray(r.n_comps))
+    # the trigger fired mid-segment, not at the end
+    if policy == "ip":
+        fired = np.nonzero(np.asarray(res.consolidated))[0]
+        assert not np.asarray(res.needs_consolidation).any()
+    else:
+        fired = np.nonzero(np.asarray(res.needs_consolidation))[0]
+        assert not np.asarray(res.consolidated).any()
+    assert len(fired) and fired[0] < plan.n_ops - 1, (
+        f"expected a mid-segment trigger, fired at {fired}"
+    )
+    # padded no-op rows applied nothing
+    assert not np.asarray(res.ok)[plan.n_ops:].any()
+
+
+@pytest.mark.parametrize("sequential", [True, False])
+def test_segment_mixed_kind_major_batches(sequential):
+    """Kind-major mixed batches with a static split ride segments too."""
+    cfg = CFG
+    data, _ = make_dataset(120, cfg.dim, n_queries=4, seed=22)
+    base = _bootstrap(cfg, data, 60)
+
+    steps, splits = [], []
+    for t in range(4):
+        ins = np.arange(60 + 8 * t, 60 + 8 * (t + 1))
+        dele = np.arange(16 * t, 16 * t + 12)
+        batch, split = mixed_update_batch(ins, data[ins], dele, cfg.dim)
+        steps.append(batch)
+        splits.append(split)
+
+    ref, _, _ = _loop_reference(
+        clone_state(base), cfg, steps, "ip", sequential, splits=splits
+    )
+    plan = plan_segments(steps, splits=splits, max_t=8)
+    assert len(plan.segments) == 1, "uniform (B, split) must share a segment"
+    seg_st, _ = run_segments(base, cfg, plan, policy="ip",
+                             sequential=sequential)
+    _tree_equal(ref, seg_st)
+
+
+def test_streaming_shell_segment_path_matches_per_op_shell():
+    """StreamingIndex.apply_segments == the per-op insert/delete shell for
+    the ip policy (whose trigger is the same device predicate per op)."""
+    cfg = CFG
+    data, _ = make_dataset(120, cfg.dim, n_queries=4, seed=23)
+
+    per_op = StreamingIndex(cfg, mode="ip", max_external_id=640)
+    seg = StreamingIndex(cfg, mode="ip", max_external_id=640)
+    per_op.insert(np.arange(50), data[:50])
+    seg.insert(np.arange(50), data[:50])
+
+    steps = _stream(cfg, data)
+    for s in _stream(cfg, data):
+        kinds = np.asarray(s.kind)[np.asarray(s.valid)]
+        ext = np.asarray(s.ext_id)[np.asarray(s.valid)]
+        if (kinds == 0).all():
+            per_op.insert(ext, np.asarray(s.vector)[np.asarray(s.valid)])
+        else:
+            per_op.delete(ext)
+    seg.apply_segments(steps, max_t=8, sequential=True)
+
+    _tree_equal(per_op.istate, seg.istate)
+    assert seg.counters.n_inserts == per_op.counters.n_inserts == 70
+    assert seg.counters.n_deletes == per_op.counters.n_deletes == 30
+    assert seg.counters.segment_s > 0.0
+    assert seg.counters.n_consolidations == per_op.counters.n_consolidations
+
+
+def test_donation_kills_old_handle_but_not_shims():
+    """The front doors donate: the pre-update handle's buffers are dead
+    after a call, while every ``StreamingIndex`` shim re-reads the live
+    handle and keeps working."""
+    cfg = CFG
+    data, _ = make_dataset(60, cfg.dim, n_queries=2, seed=24)
+
+    st = init_index_state(cfg, 300)
+    st2, _ = apply(st, cfg, insert_batch(np.arange(20), data[:20]),
+                   policy="ip", sequential=True)
+    assert st.graph.adj.is_deleted(), "apply must donate the graph buffers"
+    assert not st2.graph.adj.is_deleted()
+
+    idx = StreamingIndex(cfg, max_external_id=300)
+    idx.insert(np.arange(20), data[:20])
+    old_graph = idx.state            # caller-held handle, about to be donated
+    idx.insert(np.arange(20, 30), data[20:30])
+    assert old_graph.adj.is_deleted()
+    # the shims re-read the live handle: all still serve
+    assert idx.n_active == 30
+    assert np.asarray(idx.state.active).sum() == 30
+    assert (idx._ext2slot[:30] >= 0).all()
+    assert (idx._slot2ext >= 0).sum() == 30
+    idx.delete(np.arange(5))
+    assert idx.n_active == 25
+    _, _, slot_ids = idx.search(data[:4], k=3)
+    assert slot_ids.shape == (4, 3)
+
+
+def test_segment_trace_count_bucketed():
+    """A runbook of mixed segment lengths compiles once per
+    (T_bucket, B) bucket, not once per segment."""
+    cfg = ANNConfig(dim=12, n_cap=162, r=8, l_build=16, l_search=16,
+                    l_delete=16, k_delete=10, n_copies=2)  # unique jit key
+    data, _ = make_dataset(150, cfg.dim, n_queries=2, seed=25)
+    st = init_index_state(cfg, 600)
+
+    def steps(lo, n):
+        return [
+            insert_batch(np.arange(lo + 4 * t, lo + 4 * (t + 1)),
+                         data[lo + 4 * t : lo + 4 * (t + 1)])
+            for t in range(n)
+        ]
+
+    t0 = api_mod.TRACE_COUNTER["apply_segment"]
+    # 11 same-width steps, max_t=8 -> segments of T=8 and T=4(padded): 2 traces
+    st, _ = run_segments(st, cfg, plan_segments(steps(0, 11), max_t=8),
+                         policy="ip")
+    assert api_mod.TRACE_COUNTER["apply_segment"] - t0 == 2
+
+    # 5 steps -> one T=8 padded segment: bucket already compiled, 0 traces
+    t1 = api_mod.TRACE_COUNTER["apply_segment"]
+    st, _ = run_segments(st, cfg, plan_segments(steps(44, 5), max_t=8),
+                         policy="ip")
+    assert api_mod.TRACE_COUNTER["apply_segment"] - t1 == 0
+
+    # 2 steps -> T=2 bucket: exactly one new trace
+    t2 = api_mod.TRACE_COUNTER["apply_segment"]
+    st, _ = run_segments(st, cfg, plan_segments(steps(64, 2), max_t=8),
+                         policy="ip")
+    assert api_mod.TRACE_COUNTER["apply_segment"] - t2 == 1
+
+
+def test_segmented_runbook_matches_per_op_replay():
+    """``run_runbook(segmented=True)`` replays eval windows as compiled
+    segments: eval steps, recall curve and final state all equal the
+    per-op replay's."""
+    from repro.core import make_runbook, run_runbook
+
+    cfg = ANNConfig(dim=16, n_cap=600, r=8, l_build=16, l_search=16,
+                    l_delete=16, k_delete=10, n_copies=2)
+    rb = make_runbook("sliding_window", n=400, dim=16, t_max=20, seed=3)
+    seg_idx = StreamingIndex(cfg, mode="ip", max_external_id=2000)
+    seg_rep = run_runbook(seg_idx, rb, eval_every=5, segmented=True,
+                          segment_t=8)
+    op_idx = StreamingIndex(cfg, mode="ip", max_external_id=2000)
+    op_rep = run_runbook(op_idx, rb, eval_every=5)
+
+    assert (
+        [(m.step, m.n_active, m.recall) for m in seg_rep.steps]
+        == [(m.step, m.n_active, m.recall) for m in op_rep.steps]
+    )
+    _tree_equal(seg_idx.istate, op_idx.istate)
+    assert seg_rep.summary()["segment_s"] > 0.0
+
+
+def test_sharded_stream_fresh_consolidates_at_boundaries():
+    """ShardedIndex.update_stream gathers/consolidates/scatters any shard
+    whose ``needs_consolidation`` flag fired (fresh policy's host pass) —
+    pending tombstones do not accumulate forever."""
+    import jax
+    from repro.core.distributed import ShardedIndex
+
+    cfg = CFG
+    data, _ = make_dataset(120, cfg.dim, n_queries=2, seed=27)
+    mesh = jax.make_mesh((1,), ("shard",))
+    idx = ShardedIndex(cfg, mesh, policy="fresh", max_external_id=640)
+    idx.update_stream([insert_batch(np.arange(60), data[:60])])
+    res = idx.update_stream([delete_batch(np.arange(0, 15), cfg.dim),
+                             delete_batch(np.arange(15, 30), cfg.dim)])
+    assert np.asarray(res[0].needs_consolidation).any()
+    g = idx.states.graph
+    assert int(np.asarray(g.n_pending)[0]) == 0, "tombstones not released"
+    assert int(np.asarray(g.free_top)[0]) == cfg.n_cap - 30
+    assert not np.asarray(g.tombstone)[0].any()
+
+
+def test_plan_segments_breaks_on_shape_changes():
+    cfg = CFG
+    data, _ = make_dataset(80, cfg.dim, n_queries=2, seed=26)
+    steps = [
+        insert_batch(np.arange(0, 4), data[0:4]),      # B=4
+        insert_batch(np.arange(4, 8), data[4:8]),      # B=4
+        insert_batch(np.arange(8, 24), data[8:24]),    # B=16: new segment
+        delete_batch(np.arange(0, 4), cfg.dim),        # B=4: new segment
+    ]
+    plan = plan_segments(steps, max_t=8)
+    assert [s.n_ops for s in plan.segments] == [2, 1, 1]
+    assert [s.ops.kind.shape for s in plan.segments] == [
+        (2, 4), (1, 16), (1, 4)
+    ]
+    assert plan.n_ops == 4
