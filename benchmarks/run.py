@@ -20,6 +20,7 @@ MODULES = [
     "backend_bench",
     "search_bench",
     "update_bench",
+    "shard_bench",
     "roofline",
 ]
 

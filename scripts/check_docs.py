@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Docs-freshness gate: every symbol in docs/API.md's symbol index must
+resolve via ``from repro.core import <name>``.
+
+The index is the fenced ``text`` block under the "## Symbol index"
+heading.  Renaming or dropping a public front door without updating the
+docs fails CI here instead of silently shipping a stale reference page.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+API_MD = os.path.join(REPO, "docs", "API.md")
+
+
+def symbol_index(text: str) -> list[str]:
+    m = re.search(r"## Symbol index.*?```text\n(.*?)```", text, re.S)
+    if not m:
+        raise SystemExit("docs/API.md has no '## Symbol index' text block")
+    return m.group(1).split()
+
+
+def main() -> None:
+    with open(API_MD) as f:
+        symbols = symbol_index(f.read())
+    if len(symbols) < 10:
+        raise SystemExit(f"suspiciously small symbol index: {symbols}")
+    import repro.core as core
+
+    missing = [s for s in symbols if not hasattr(core, s)]
+    if missing:
+        raise SystemExit(
+            f"docs/API.md names symbols that do not resolve via "
+            f"'from repro.core import ...': {missing}"
+        )
+    print(f"docs OK: {len(symbols)} symbols resolve from repro.core")
+
+
+if __name__ == "__main__":
+    main()

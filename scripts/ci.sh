@@ -35,6 +35,15 @@ echo "== update streams: two-dispatch vs unified vs segment (BENCH_update.json) 
 # (10% slack for 1-core timing noise), and apply_segment updates/s >=
 # per-op apply over the T>=16, B>=64 streams in aggregate
 python -m benchmarks.update_bench --smoke --out BENCH_update.json
+
+echo "== sharded streams: compact vs replicate routing (BENCH_update.json:shard) =="
+# --smoke enforces, on aggregate min-of-repeats: compact routing beats
+# replicate-and-mask in batched mode (masked lanes pay tile width there)
+# and does not regress the sequential mode past 10% noise slack
+python -m benchmarks.shard_bench --smoke --out BENCH_update.json
 cat BENCH_update.json
+
+echo "== docs freshness (docs/API.md symbol index) =="
+python scripts/check_docs.py
 
 echo "CI OK"

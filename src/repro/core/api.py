@@ -26,7 +26,12 @@ functional surface:
     stream: ``lax.scan`` of the ``apply`` body over a (T, B) op tensor —
     one dispatch for T ops, the ip policy's consolidation sweep running
     under ``lax.cond`` mid-segment.  ``plan_segments``/``run_segments``
-    chop an arbitrary op stream into bucket-padded segments.
+    chop an arbitrary op stream into bucket-padded segments;
+  * ``compact_owner_batch``/``compact_owner_segment`` are the sharding
+    constructors: they pack each shard's owned lanes of a batch (or a
+    whole (T, B) segment) into static power-of-two per-shard sub-tensors,
+    so ``ShardedIndex`` ships every shard only its ~B/S owned lanes
+    instead of replicating the batch and masking S-1 of every lane.
 
 Semantics (pinned lane-for-lane by ``tests/test_api.py``): a mixed batch
 applies all insert lanes first (in lane order), then all delete lanes (in
@@ -74,6 +79,7 @@ from .types import (
     init_index_state,
     noop_update_batch,
     stack_update_batches,
+    take_update_lanes,
 )
 
 # Incremented once per trace of ``apply``/``apply_segment`` (not per call):
@@ -277,6 +283,120 @@ def mixed_update_batch(ins_ext, ins_vectors, del_ext, dim: int):
         jnp.concatenate([a, b]) for a, b in zip(ins, dele)
     ])
     return batch, ins.kind.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Owner-compacted sharding constructors (ShardedIndex host helpers)
+# ---------------------------------------------------------------------------
+
+
+def _np_update_batch(batch: UpdateBatch) -> UpdateBatch:
+    return UpdateBatch(*[np.asarray(f) for f in batch])
+
+
+def _compact_owner_batch_np(batch: UpdateBatch, owners, n_shards: int,
+                            *, bucket: Optional[int] = None):
+    """``compact_owner_batch`` body on numpy payloads (the segment packer
+    loops this per step and converts to device arrays exactly once)."""
+    b = _np_update_batch(batch)
+    owners = np.where(b.valid, np.asarray(owners), -1)
+    if owners.size and int(owners.max()) >= n_shards:
+        raise ValueError(
+            f"owner id(s) >= n_shards={n_shards}: "
+            f"{np.unique(owners[owners >= n_shards]).tolist()}"
+        )
+    counts = np.bincount(owners[owners >= 0], minlength=n_shards)
+    need = int(counts.max())
+    if bucket is None:
+        bucket = next_bucket(max(need, 1))
+    if need > bucket:
+        raise ValueError(
+            f"per-shard bucket {bucket} < max owned lanes {need}"
+        )
+    dim = b.vector.shape[1]
+    pos = np.full(owners.shape, -1, np.int32)
+    out = UpdateBatch(
+        kind=np.full((n_shards, bucket), KIND_INSERT, np.int32),
+        ext_id=np.full((n_shards, bucket), INVALID, np.int32),
+        vector=np.zeros((n_shards, bucket, dim), np.float32),
+        valid=np.zeros((n_shards, bucket), bool),
+    )
+    for s in range(n_shards):
+        idx = np.nonzero(owners == s)[0]
+        pos[idx] = np.arange(len(idx), dtype=np.int32)
+        sub = take_update_lanes(b, idx)
+        out.kind[s, : len(idx)] = sub.kind
+        out.ext_id[s, : len(idx)] = sub.ext_id
+        out.vector[s, : len(idx)] = sub.vector
+        out.valid[s, : len(idx)] = sub.valid
+    return out, pos, bucket
+
+
+def compact_owner_batch(batch: UpdateBatch, owners, n_shards: int,
+                        *, bucket: Optional[int] = None):
+    """Pack each shard's owned lanes of one ``UpdateBatch`` into a compact
+    per-shard sub-batch.
+
+    ``owners``: i32[B] owning shard per lane (negative = unowned; values
+    at or beyond ``n_shards`` are a loud ``ValueError``; invalid lanes are
+    ignored regardless).  Returns ``(stacked, pos, bucket)``:
+
+      * ``stacked`` — an (S, bucket) ``UpdateBatch``; row ``s`` holds shard
+        ``s``'s owned lanes in their original relative order, padded to the
+        static power-of-two ``bucket`` with masked no-op lanes.  Feed it to
+        an update program whose ``shard_map`` in-spec shards the leading
+        axis: each shard then applies ONLY ~B/S lanes instead of masking
+        S-1 of every replicated lane;
+      * ``pos`` — i32[B], lane i's position inside its owner's sub-batch
+        (-1 for unowned/invalid lanes), for scattering per-lane results
+        back to the caller's lane order;
+      * ``bucket`` — the per-shard lane width actually used
+        (``next_bucket`` of the max owned-lane count unless pinned).
+
+    Per-shard relative lane order is preserved, so per-shard serial
+    semantics are bit-identical to the replicate-and-mask layout.
+    """
+    out, pos, bucket = _compact_owner_batch_np(
+        batch, owners, n_shards, bucket=bucket
+    )
+    return UpdateBatch(*[jnp.asarray(f) for f in out]), pos, bucket
+
+
+def compact_owner_segment(ops: UpdateBatch, owners, n_shards: int,
+                          *, bucket: Optional[int] = None):
+    """Per-shard segment planning: owner-compact every op of a (T, B)
+    segment tensor into one (S, T, bucket) op tensor.
+
+    ``owners``: i32[T, B].  One common power-of-two ``bucket`` (the max
+    owned-lane count over every (shard, op) cell unless pinned) keeps the
+    stacked tensor static — the whole-segment scan then compiles once per
+    (T_bucket, bucket) shape while each shard scans T ops of ~B/S lanes.
+    Returns ``(stacked, pos, bucket)`` with ``pos`` i32[T, B] as in
+    ``compact_owner_batch``.
+    """
+    ops_np = _np_update_batch(ops)
+    owners = np.where(ops_np.valid, np.asarray(owners), -1)
+    t_steps = ops_np.kind.shape[0]
+    need = 1
+    for t in range(t_steps):
+        row = owners[t]
+        counts = np.bincount(row[row >= 0], minlength=n_shards)
+        need = max(need, int(counts.max()))
+    if bucket is None:
+        bucket = next_bucket(need)
+    # pack every step in numpy; one stack + one host->device conversion
+    # per field at the end (not T x 4 small transfers)
+    steps, pos = [], []
+    for t in range(t_steps):
+        sub, p, _ = _compact_owner_batch_np(
+            take_update_lanes(ops_np, t), owners[t], n_shards, bucket=bucket
+        )
+        steps.append(sub)
+        pos.append(p)
+    stacked = UpdateBatch(*[
+        jnp.asarray(np.stack(arrs, axis=1)) for arrs in zip(*steps)
+    ])
+    return stacked, np.stack(pos), bucket
 
 
 # ---------------------------------------------------------------------------
@@ -738,6 +858,8 @@ __all__ = [
     "apply_segment",
     "available_policies",
     "clone_state",
+    "compact_owner_batch",
+    "compact_owner_segment",
     "consolidate_if_needed",
     "device_sweep",
     "delete_batch",

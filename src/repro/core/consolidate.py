@@ -146,6 +146,31 @@ def _release_tombstones(state: GraphState, cfg: ANNConfig) -> GraphState:
     )
 
 
+def consolidate_stacked(graphs: GraphState, cfg: ANNConfig, consolidate_fn,
+                        shard_ids) -> GraphState:
+    """Run a per-shard consolidation pass over a STACKED ``GraphState``
+    (leading shard axis, as ``ShardedIndex`` carries it).
+
+    For each shard in ``shard_ids``: gather that shard's graph off the
+    stacked pytree, run ``consolidate_fn(graph, cfg)`` (e.g. the fresh
+    policy's host-orchestrated Algorithm 4, or ``light_consolidate`` under
+    ``force``), and scatter the result back into the stack.  This is the
+    paper's offline/background activity lifted to the sharded deployment,
+    so it optimises for simplicity over copies: each un-jitted
+    ``.at[s].set`` scatter rebuilds the full stacked leaves (untriggered
+    shards keep their CONTENTS, but the buffers are reallocated per
+    consolidated shard) — acceptable off the serving path; a donated
+    jitted scatter would make it O(one shard) (ROADMAP follow-on).
+    """
+    for s in shard_ids:
+        g = jax.tree.map(lambda x: x[s], graphs)
+        g = consolidate_fn(g, cfg)
+        graphs = jax.tree.map(
+            lambda full, new: full.at[s].set(new), graphs, g
+        )
+    return graphs
+
+
 def fresh_consolidate(
     state: GraphState, cfg: ANNConfig, chunk: int = 256
 ) -> GraphState:

@@ -1,33 +1,56 @@
 """Sharded streaming index: the paper's single-node system scaled out.
 
-Each device along the flattened mesh owns an independent sub-index — since
-the ``core/api.py`` redesign that is a full device-resident ``IndexState``
-handle (graph + external-id map + op counters) stacked on a leading shard
-axis, and updates go through the SAME jitted ``apply(state, cfg,
-UpdateBatch)`` front door as ``StreamingIndex``, just under ``shard_map``.
-That gives the sharded index real external-id insert/delete/search
-semantics: callers address points by external id only; slots and owner
-arrays are internal.
+Each device along the flattened mesh owns an independent sub-index — a full
+device-resident ``IndexState`` handle (graph + external-id map + op
+counters) stacked on a leading shard axis — and every operation goes
+through the SAME pure front doors as ``StreamingIndex`` (``core/api.py``),
+just under ``shard_map``.  Callers address points by external id only;
+slots and owner bookkeeping are internal.
 
-  * insert/delete: one replicated ``UpdateBatch`` fans out; each shard
-    masks the batch down to the lanes it owns (stable hash routing) and
-    applies them with per-shard serial semantics — exactly the paper's
-    concurrency model (independent streams per shard, no cross-shard
-    edges).  The lane payload is int32 end-to-end (external ids and slots
-    are never laundered through floats).
-  * search: the query batch fans out to every shard (replicated); each
-    shard runs ONE natively batched beam over its local graph
-    (core/search_batched.py), maps its local top-k to external ids on
-    device via its ``slot2ext`` map, and a global top-k merge over the
-    all-gathered (k x S) candidates yields the answer.
+Since the shard-native rework, per-shard work SHRINKS as shards are added
+instead of being masked away:
 
-Straggler mitigation for serving: ``search`` queries all shards anyway
-(fan-out IS the redundancy); at 1000-node scale the merge tolerates missing
-shards by masking their results (see ft/supervisor).
+  * **updates** (default ``routing="compact"``): the host packs each
+    shard's owned lanes (stable hash routing) into a compact power-of-two
+    per-shard sub-batch (``core/api.py::compact_owner_batch`` /
+    ``compact_owner_segment``, padded with masked no-op lanes), so each
+    shard's ``apply`` scan runs over ~B/S lanes.  The pre-rework
+    replicate-and-mask layout — every shard receives all B lanes and masks
+    the S-1/S it does not own — is kept as ``routing="replicate"`` and is
+    bit-identical per shard (compaction preserves per-shard lane order).
+    What a masked lane COSTS depends on the visibility mode: the batched
+    phases (``sequential=False``) carry every lane through the shared
+    (B, R) beam tiles, so compaction shrinks real per-shard compute S-fold
+    (benchmarks/shard_bench.py measures ~1.4x at S=2); the serial scan
+    (``sequential=True``, default) early-exits masked lanes per
+    ``lax.cond``, so there the win is structural — S-fold shorter scans
+    and op tensors — rather than CPU wall clock.
+  * **search** has two modes.  Replicate-and-merge (default): the query
+    batch fans out to every shard, each runs ONE natively batched beam
+    (core/search_batched.py) over its local graph, and a global top-k
+    merge over the all-gathered (S, Q, k) candidates yields the answer.
+    ``partition="queries"``: disjoint query sub-batches start one per
+    shard and rotate around the ring (``lax.ppermute``), each carrying a
+    running global top-k that is merged incrementally
+    (``search_batched.merge_topk``) after every hop — per shard, the beam
+    is Q/S wide instead of Q, and each sub-batch's merge overlaps the next
+    sub-batch's beams inside one compiled step.
+  * **consolidation**: device policies (ip) sweep mid-stream under
+    ``lax.cond`` exactly as the local front doors; host-orchestrated
+    policies (fresh, the paper's offline Algorithm 4) go through
+    ``consolidate_sharded`` — gather one shard's graph off the stacked
+    state, run the policy's pass, scatter it back — driven automatically
+    by the ``needs_consolidation`` flags that ``update_stream`` segments
+    surface.
+
+Straggler mitigation for serving: replicate-mode ``search`` queries all
+shards anyway (fan-out IS the redundancy); at 1000-node scale the merge
+tolerates missing shards by masking their results (see ft/supervisor).
 
 Distance math inside every per-shard beam rides the kernel engine selected
-by ``cfg.backend`` because the unified ``apply``/search paths resolve the
-backend from the (static) config under ``shard_map``.
+by ``cfg.backend`` (the unified front doors resolve it from the static
+config under ``shard_map``); lane payloads are int32 end-to-end (external
+ids and slots are never laundered through floats).
 """
 from __future__ import annotations
 
@@ -43,6 +66,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .api import (
     apply,
+    compact_owner_batch,
+    compact_owner_segment,
     delete_batch,
     device_sweep,
     get_policy,
@@ -50,8 +75,25 @@ from .api import (
     plan_segments,
     segment_scan,
 )
-from .search_batched import batched_greedy_search
+from .backend import BIG
+from .consolidate import consolidate_stacked
+from .search_batched import batched_greedy_search, merge_topk, next_bucket
 from .types import INVALID, ANNConfig, IndexState, clip_ids, init_index_state
+
+# Incremented once per trace (not per call) of each SPMD program, with the
+# traced op-tensor shape recorded in TRACE_SHAPES: the sharding tests pin
+# both the power-of-two bucketing discipline (ragged batches share
+# compiles) and the compact-routing contract (per-shard lane width <=
+# next_bucket(ceil(B / S)), S-fold smaller than the replicated width).
+TRACE_COUNTER = {
+    "update_compact": 0,
+    "segment_compact": 0,
+    "update_replicate": 0,
+    "segment_replicate": 0,
+    "search_replicate": 0,
+    "search_partition": 0,
+}
+TRACE_SHAPES: dict = {k: [] for k in TRACE_COUNTER}
 
 
 def as_int_payload(ids) -> jax.Array:
@@ -69,14 +111,30 @@ def as_int_payload(ids) -> jax.Array:
 
 class ShardedIndex:
     """S sub-indexes run in SPMD over a 1-d ("shard",) mesh, all fronted by
-    the unified ``apply`` op stream (external-id semantics per shard)."""
+    the unified ``apply`` op stream (external-id semantics per shard).
+
+    ``routing`` selects the update fan-out: ``"compact"`` (default) ships
+    each shard only its owned lanes, ``"replicate"`` ships every shard the
+    whole batch with non-owned lanes masked (the pre-rework layout, kept
+    for parity checks and benchmarking the difference).
+    """
 
     def __init__(self, cfg: ANNConfig, mesh: Mesh, axis: str = "shard",
-                 policy: str = "ip", max_external_id: Optional[int] = None):
+                 policy: str = "ip", max_external_id: Optional[int] = None,
+                 routing: str = "compact", sequential: bool = True):
+        if routing not in ("compact", "replicate"):
+            raise ValueError(f"unknown routing {routing!r}")
         self.cfg = cfg
         self.mesh = mesh
         self.axis = axis
         self.policy = policy
+        self.routing = routing
+        # True: per-shard serial lane scan (the paper's concurrency model,
+        # each lane's search sees every earlier lane's writes).  False: the
+        # relaxed-visibility batched phases — the regime where owner
+        # compaction also shrinks the per-shard (B, R) beam tiles S-fold
+        # (masked lanes of a replicated batch still pay tile width there).
+        self.sequential = sequential
         self.n_shards = mesh.shape[axis]
         if max_external_id is None:
             max_external_id = cfg.n_cap * 4
@@ -88,9 +146,13 @@ class ShardedIndex:
             ),
             NamedSharding(mesh, P(axis)),
         )
+        self._shard_spec = NamedSharding(mesh, P(axis))
         self._search = self._build_search()
+        self._search_part = self._build_search_partitioned()
         self._update = self._build_update()
+        self._update_compact = self._build_update_compact()
         self._update_segment = self._build_update_segment()
+        self._update_segment_compact = self._build_update_segment_compact()
 
     # -- SPMD programs -------------------------------------------------------
 
@@ -99,6 +161,9 @@ class ShardedIndex:
 
         @functools.partial(jax.jit, static_argnames=("k", "l"))
         def search(states, queries, *, k: int, l: int):
+            TRACE_COUNTER["search_replicate"] += 1
+            TRACE_SHAPES["search_replicate"].append(tuple(queries.shape))
+
             def shard_fn(state, q):
                 state = jax.tree.map(lambda x: x[0], state)  # unstack local
 
@@ -138,22 +203,88 @@ class ShardedIndex:
 
         return search
 
+    def _build_search_partitioned(self):
+        cfg, axis, n_shards = self.cfg, self.axis, self.n_shards
+
+        @functools.partial(jax.jit, static_argnames=("k", "l"))
+        def search_p(states, queries, valid, *, k: int, l: int):
+            """queries: (S * Qs, dim) padded batch sharded on the lane
+            axis; valid: bool[S * Qs] lane mask.  Each shard starts with
+            the disjoint sub-batch it owns; sub-batches rotate around the
+            ring (``lax.ppermute``) carrying their running global top-k,
+            so after S hops every query has beamed over every shard's
+            graph.  Per shard the beam is Qs = Q/S lanes wide instead of
+            Q, and the incremental ``merge_topk`` of one sub-batch is
+            data-independent of the NEXT sub-batch's beam, so XLA overlaps
+            the merge with the incoming hop inside the compiled step."""
+            TRACE_COUNTER["search_partition"] += 1
+            TRACE_SHAPES["search_partition"].append(tuple(queries.shape))
+
+            def shard_fn(state, q, v):
+                state = jax.tree.map(lambda x: x[0], state)
+                me = lax.axis_index(axis)
+                perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+                qs = q.shape[0]
+                best_d = jnp.full((qs, k), BIG, jnp.float32)
+                best_i = jnp.full((qs, k), INVALID, jnp.int32)
+                best_s = jnp.full((qs, k), INVALID, jnp.int32)
+                comps = jnp.zeros((), jnp.int32)
+                for _ in range(n_shards):
+                    res = batched_greedy_search(
+                        state.graph, cfg, q, k=k, l=l, valid=v
+                    )
+                    ids = res.topk_ids
+                    ext = jnp.where(
+                        ids >= 0,
+                        state.slot2ext[clip_ids(ids, cfg.n_cap)],
+                        INVALID,
+                    )
+                    here = jnp.where(
+                        ids >= 0, jnp.broadcast_to(me, ids.shape), INVALID
+                    ).astype(jnp.int32)
+                    d = jnp.where(ids >= 0, res.topk_dists, BIG)
+                    best_d, (best_i, best_s) = merge_topk(
+                        best_d, d, k, (best_i, ext), (best_s, here)
+                    )
+                    comps = comps + jnp.sum(res.n_comps).astype(jnp.int32)
+                    # rotate the sub-batch (and its running merge) onward
+                    q, v, best_d, best_i, best_s, comps = [
+                        lax.ppermute(x, axis, perm)
+                        for x in (q, v, best_d, best_i, best_s, comps)
+                    ]
+                # S rotations: every sub-batch is back on its home shard
+                return best_i, best_s, best_d, comps[None]
+
+            return shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(axis), P(axis), P(axis)),
+                out_specs=(P(axis), P(axis), P(axis), P(axis)),
+                check_rep=False,
+            )(states, queries, valid)
+
+        return search_p
+
     def _build_update(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
+        sequential = self.sequential
 
         @functools.partial(jax.jit, donate_argnums=0)
         def update(states, batch, owners):
-            """batch: a replicated ``UpdateBatch``; owners: i32[B] owning
-            shard of each lane.  Every shard runs the same unified ``apply``
-            with non-owned lanes masked invalid."""
+            """Replicate-and-mask layout: ``batch`` is a replicated
+            ``UpdateBatch``; ``owners`` i32[B] is the owning shard of each
+            lane.  Every shard runs the same unified ``apply`` over all B
+            lanes with non-owned lanes masked invalid."""
+            TRACE_COUNTER["update_replicate"] += 1
+            TRACE_SHAPES["update_replicate"].append(tuple(batch.kind.shape))
 
             def shard_fn(state, batch, owners):
                 state = jax.tree.map(lambda x: x[0], state)
                 me = lax.axis_index(axis)
                 mine = batch._replace(valid=batch.valid & (owners == me))
-                # per-shard serial semantics (the paper's concurrency model)
+                # per-shard update semantics (sequential: the paper's
+                # serial concurrency model; else relaxed-visibility)
                 state, res = apply(
-                    state, cfg, mine, policy=policy, sequential=True
+                    state, cfg, mine, policy=policy, sequential=sequential
                 )
                 # device-side consolidation trigger per op, exactly as the
                 # segment path and StreamingIndex: each shard sweeps when
@@ -178,18 +309,62 @@ class ShardedIndex:
 
         return update
 
+    def _build_update_compact(self):
+        cfg, axis, policy = self.cfg, self.axis, self.policy
+        sequential = self.sequential
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def update(states, batch):
+            """Owner-compacted layout: ``batch`` is an (S, Bc)
+            ``UpdateBatch`` sharded on the leading axis — row ``s`` holds
+            exactly shard ``s``'s owned lanes (original relative order,
+            bucket-padded).  No owner masking: each shard's ``apply`` scan
+            is Bc ~= B/S lanes wide instead of B."""
+            TRACE_COUNTER["update_compact"] += 1
+            TRACE_SHAPES["update_compact"].append(tuple(batch.kind.shape))
+
+            def shard_fn(state, batch):
+                state = jax.tree.map(lambda x: x[0], state)
+                mine = jax.tree.map(lambda x: x[0], batch)
+                state, res = apply(
+                    state, cfg, mine, policy=policy, sequential=sequential
+                )
+                pol = get_policy(policy)
+                if pol.device_consolidation:
+                    trig = pol.should_consolidate_device(cfg, state.graph)
+                    state = state._replace(
+                        graph=device_sweep(state.graph, cfg, pol, trig)
+                    )
+                return (
+                    jax.tree.map(lambda x: x[None], state),
+                    jax.tree.map(lambda x: x[None], res),
+                )
+
+            return shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(axis), P(axis)),
+                out_specs=(P(axis), P(axis)),
+                check_rep=False,
+            )(states, batch)
+
+        return update
+
     def _build_update_segment(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
+        sequential = self.sequential
 
         @functools.partial(jax.jit, donate_argnums=0)
         def update_segment(states, ops, owners):
-            """ops: a replicated (T, B) op tensor; owners: i32[T, B] owning
-            shard per lane per op.  Every shard runs the same compiled
-            ``lax.scan`` of the ``apply`` body (core/api.py::segment_scan)
-            with non-owned lanes masked invalid — T ops, ONE dispatch,
-            per-shard serial semantics, device-side consolidation trigger
-            per op (the ip policy's light sweep fires mid-segment on
-            whichever shard's counters cross the threshold)."""
+            """Replicate-and-mask segment: ``ops`` is a replicated (T, B)
+            op tensor; ``owners`` i32[T, B].  Every shard runs the same
+            compiled ``lax.scan`` of the ``apply`` body
+            (core/api.py::segment_scan) with non-owned lanes masked
+            invalid — T ops, ONE dispatch, per-shard serial semantics,
+            device-side consolidation trigger per op (the ip policy's
+            light sweep fires mid-segment on whichever shard's counters
+            cross the threshold)."""
+            TRACE_COUNTER["segment_replicate"] += 1
+            TRACE_SHAPES["segment_replicate"].append(tuple(ops.kind.shape))
 
             def shard_fn(state, ops, owners):
                 state = jax.tree.map(lambda x: x[0], state)
@@ -197,7 +372,7 @@ class ShardedIndex:
                 mine = ops._replace(valid=ops.valid & (owners == me))
                 state, res = segment_scan(
                     state, cfg, mine, get_policy(policy),
-                    sequential=True, split=None,
+                    sequential=sequential, split=None,
                 )
                 return (
                     jax.tree.map(lambda x: x[None], state),
@@ -213,12 +388,72 @@ class ShardedIndex:
 
         return update_segment
 
+    def _build_update_segment_compact(self):
+        cfg, axis, policy = self.cfg, self.axis, self.policy
+        sequential = self.sequential
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def update_segment(states, ops):
+            """Owner-compacted segment: ``ops`` is an (S, T, Bc) op tensor
+            sharded on the leading axis (``compact_owner_segment``) — the
+            same compiled ``lax.scan`` of the ``apply`` body, but each
+            shard scans T ops of Bc ~= B/S lanes instead of B."""
+            TRACE_COUNTER["segment_compact"] += 1
+            TRACE_SHAPES["segment_compact"].append(tuple(ops.kind.shape))
+
+            def shard_fn(state, ops):
+                state = jax.tree.map(lambda x: x[0], state)
+                mine = jax.tree.map(lambda x: x[0], ops)
+                state, res = segment_scan(
+                    state, cfg, mine, get_policy(policy),
+                    sequential=sequential, split=None,
+                )
+                return (
+                    jax.tree.map(lambda x: x[None], state),
+                    jax.tree.map(lambda x: x[None], res),
+                )
+
+            return shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(P(axis), P(axis)),
+                out_specs=(P(axis), P(axis)),
+                check_rep=False,
+            )(states, ops)
+
+        return update_segment
+
     # -- host API -------------------------------------------------------------
 
     def route(self, ext_ids: np.ndarray) -> np.ndarray:
         """Owner shard of each external id (stable hash routing)."""
         return (np.asarray(ext_ids, np.int64) * 2654435761 % 2**31
                 % self.n_shards).astype(np.int32)
+
+    def _apply_update(self, batch, owners):
+        """Route one bucket-padded ``UpdateBatch`` through the selected
+        update program (``self.routing``).  ``owners``: i32[B] per-lane
+        owner (-1 for padding lanes).  Returns per-original-lane
+        ``(ok, slot)`` numpy arrays, independent of the routing layout."""
+        if self.routing == "compact":
+            cbatch, pos, _ = compact_owner_batch(
+                batch, owners, self.n_shards
+            )
+            cbatch = jax.device_put(cbatch, self._shard_spec)
+            self.states, res = self._update_compact(self.states, cbatch)
+            ok_c = np.asarray(res.ok)                       # (S, Bc)
+            slot_c = np.asarray(res.slot)
+            ok = np.zeros(owners.shape, bool)
+            slot = np.full(owners.shape, INVALID, np.int32)
+            m = pos >= 0
+            ok[m] = ok_c[owners[m], pos[m]]
+            slot[m] = slot_c[owners[m], pos[m]]
+            return ok, slot
+        self.states, res = self._update(
+            self.states, batch, as_int_payload(owners)
+        )
+        # off-owner lanes are masked no-ops: ok False, slot INVALID
+        return (np.asarray(res.ok).any(axis=0),
+                np.asarray(res.slot).max(axis=0))
 
     def insert(self, ext_ids, vectors):
         """Insert by external id; returns (slots, owners) bookkeeping (the
@@ -234,18 +469,17 @@ class ShardedIndex:
         owners = self.route(ext_ids)
         batch = insert_batch(ext_ids, vectors)
         pad = batch.kind.shape[0] - len(ext_ids)
-        self.states, res = self._update(
-            self.states, batch,
-            as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
+        ok, slot = self._apply_update(
+            batch,
+            np.concatenate([owners, np.full(pad, -1)]).astype(np.int32),
         )
-        ok = np.asarray(res.ok).any(axis=0)[: len(ext_ids)]
+        ok = ok[: len(ext_ids)]
         if not ok.all():
             raise RuntimeError(
                 f"insert failed on owning shard (capacity exhausted) for "
                 f"external id(s) {ext_ids[~ok][:8].tolist()}"
             )
-        local = np.asarray(res.slot)             # (S, B) INVALID off-owner
-        return local.max(axis=0)[: len(ext_ids)], owners
+        return slot[: len(ext_ids)], owners
 
     def delete(self, ext_ids) -> None:
         """Delete by external id, routed to the owning shard.  Duplicates
@@ -258,11 +492,11 @@ class ShardedIndex:
         owners = self.route(ext_ids)
         batch = delete_batch(ext_ids, self.cfg.dim)
         pad = batch.kind.shape[0] - len(ext_ids)
-        self.states, res = self._update(
-            self.states, batch,
-            as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
+        ok, _ = self._apply_update(
+            batch,
+            np.concatenate([owners, np.full(pad, -1)]).astype(np.int32),
         )
-        ok = np.asarray(res.ok).any(axis=0)[: len(ext_ids)]
+        ok = ok[: len(ext_ids)]
         if not ok.all():
             raise KeyError(
                 f"delete of unknown external id(s): "
@@ -273,8 +507,8 @@ class ShardedIndex:
         """Deprecated shim (pre-external-id API): delete by (slot, owner)
         pairs.  Recovers the external ids from the device-resident
         ``slot2ext`` maps and routes an int32 payload through the unified
-        ``apply`` stream — ids above 2**24 survive exactly (the old path
-        carried slots in a float32 buffer)."""
+        ``apply`` stream — ids above 2**24 survive exactly (the oldest
+        path carried slots in a float32 buffer)."""
         slots = np.asarray(as_int_payload(slots))
         owners = np.asarray(owners, np.int64)
         ext = np.asarray(self.states.slot2ext)[owners, slots]
@@ -282,9 +516,9 @@ class ShardedIndex:
             raise KeyError("delete_slots of unoccupied slot(s)")
         batch = delete_batch(ext, self.cfg.dim)
         pad = batch.kind.shape[0] - len(ext)
-        self.states, _ = self._update(
-            self.states, batch,
-            as_int_payload(np.concatenate([owners, np.full(pad, -1)])),
+        self._apply_update(
+            batch,
+            np.concatenate([owners, np.full(pad, -1)]).astype(np.int32),
         )
 
     def update_stream(self, batches, *, max_t: int = 64):
@@ -292,19 +526,29 @@ class ShardedIndex:
         scans under ``shard_map`` — one dispatch per (T, B) bucket instead
         of one per batch.  Bucketing rides the same ``plan_segments``
         discipline as the local front doors (consecutive same-width
-        batches share a segment; width changes start a new one).
+        batches share a segment; width changes start a new one); with the
+        default compact routing each segment is additionally owner-packed
+        (``compact_owner_segment``) so every shard scans T ops of
+        ~B/S lanes.
 
         Lanes route to their owning shard by external id (same stable hash
         as ``insert``/``delete``); invalid lanes are no-ops everywhere.
         Unlike the per-op paths this surface raises no per-id exceptions —
         a failed lane is visible as ``ok=False`` in the returned
-        per-segment ``SegmentResult`` list (stacked (S, T, B)).
+        per-segment ``SegmentResult`` list.  Under compact routing the
+        per-lane fields (``slot``/``ok``/``n_comps``) are scattered back
+        to CALLER lane order, (T, B) — so stream lane (t, b) is
+        addressable directly; under replicate they stay shard-stacked
+        (S, T, B) with off-owner lanes masked.  The consolidation flags
+        (``consolidated``/``needs_consolidation``) are per-shard (S, T)
+        in both layouts.
 
         Host-orchestrated policies (fresh) consolidate at segment
-        boundaries: any shard whose ``needs_consolidation`` flag fired gets
-        its graph gathered, passed through the policy's host pass and
-        scattered back (consolidation is the paper's offline activity —
-        the transfer is off the serving path)."""
+        boundaries through ``consolidate_sharded``: any shard whose
+        ``needs_consolidation`` flag fired gets its graph gathered, passed
+        through the policy's host pass and scattered back (consolidation
+        is the paper's offline activity — the transfer is off the serving
+        path)."""
         pol = get_policy(self.policy)
         plan = plan_segments(batches, max_t=max_t)
         results = []
@@ -313,31 +557,111 @@ class ShardedIndex:
                 np.asarray(seg.ops.valid),
                 self.route(np.asarray(seg.ops.ext_id, np.int64)), -1,
             ).astype(np.int32)                          # (T, B)
-            self.states, res = self._update_segment(
-                self.states, seg.ops, as_int_payload(owners)
-            )
+            if self.routing == "compact":
+                cops, pos, _ = compact_owner_segment(
+                    seg.ops, owners, self.n_shards
+                )
+                cops = jax.device_put(cops, self._shard_spec)
+                self.states, res = self._update_segment_compact(
+                    self.states, cops
+                )
+                # per-lane results back to caller lane order: without this
+                # an ok=False cell of the owner-packed (S, T, Bc) tensor
+                # is not attributable to a stream lane
+                ok_c = np.asarray(res.ok)
+                slot_c = np.asarray(res.slot)
+                comps_c = np.asarray(res.n_comps)
+                m = pos >= 0
+                t_of = np.broadcast_to(
+                    np.arange(pos.shape[0])[:, None], pos.shape
+                )
+                ok = np.zeros(pos.shape, bool)
+                slot = np.full(pos.shape, INVALID, np.int32)
+                comps = np.zeros(pos.shape, comps_c.dtype)
+                ok[m] = ok_c[owners[m], t_of[m], pos[m]]
+                slot[m] = slot_c[owners[m], t_of[m], pos[m]]
+                comps[m] = comps_c[owners[m], t_of[m], pos[m]]
+                res = res._replace(slot=slot, ok=ok, n_comps=comps)
+            else:
+                self.states, res = self._update_segment(
+                    self.states, seg.ops, as_int_payload(owners)
+                )
             if not pol.device_consolidation:
                 flags = np.asarray(res.needs_consolidation)   # (S, T)
-                for s in np.nonzero(flags.any(axis=1))[0]:
-                    shard_graph = jax.tree.map(
-                        lambda x: x[s], self.states.graph
-                    )
-                    new_graph = pol.consolidate(shard_graph, self.cfg)
-                    self.states = self.states._replace(
-                        graph=jax.tree.map(
-                            lambda full, g: full.at[s].set(g),
-                            self.states.graph, new_graph,
-                        )
-                    )
+                self.consolidate_sharded(np.nonzero(flags.any(axis=1))[0])
             results.append(res)
         return results
 
-    def search(self, queries, k=10, l=64):
+    def consolidate_sharded(self, shard_ids=None, *, force: bool = False):
+        """Host-orchestrated per-shard consolidation over the stacked
+        state: for each shard in ``shard_ids``, gather its graph, run the
+        policy's consolidation pass (fresh: Algorithm 4, the paper's
+        offline batch pass; ip: the Algorithm-6 sweep) and scatter the
+        result back (``core/consolidate.py::consolidate_stacked``).
+
+        ``shard_ids=None`` selects every shard whose consolidation
+        trigger currently fires — or, with ``force=True``, every shard
+        with pending removals.  Returns the list of shard ids
+        consolidated.  ``update_stream`` calls this automatically for
+        host-orchestrated policies whenever a segment surfaces
+        ``needs_consolidation``."""
+        pol = get_policy(self.policy)
+        if shard_ids is None:
+            n_pending = np.asarray(self.states.graph.n_pending)
+            n_active = np.asarray(self.states.graph.n_active)
+            if force:
+                fire = n_pending > 0
+            else:
+                fire = np.array([
+                    pol.should_consolidate(self.cfg, int(a), int(p))
+                    for a, p in zip(n_active, n_pending)
+                ], dtype=bool)
+            shard_ids = np.nonzero(fire)[0]
+        shard_ids = [int(s) for s in np.asarray(shard_ids).ravel()]
+        if shard_ids:
+            self.states = self.states._replace(
+                graph=consolidate_stacked(
+                    self.states.graph, self.cfg, pol.consolidate, shard_ids
+                )
+            )
+        return shard_ids
+
+    def search(self, queries, k=10, l=64, *, partition: Optional[str] = None):
         """Returns (ext_ids (Q, k), owner shards (Q, k), dists (Q, k),
-        total comps) — ids are EXTERNAL ids since the api redesign."""
-        ids, shards, dists, comps = self._search(
-            self.states, jnp.asarray(queries, jnp.float32), k=k, l=l
+        total comps) — ids are EXTERNAL ids off the device-resident
+        ``slot2ext`` maps.
+
+        ``partition=None``/``"replicate"`` (default) fans the whole query
+        batch out to every shard and merges the all-gathered candidates —
+        lowest latency for small Q, and inherently straggler-redundant.
+        ``partition="queries"`` routes disjoint Q/S sub-batches to
+        different shards and rotates them around the ring, overlapping
+        each sub-batch's global merge with the next one's beams — per-hop
+        work per shard shrinks S-fold, the right trade once Q is large
+        enough to fill every shard (queries are padded to S equal
+        power-of-two sub-batches; both modes return identical top-k)."""
+        q = np.asarray(queries, np.float32)
+        if partition in (None, "replicate"):
+            ids, shards, dists, comps = self._search(
+                self.states, jnp.asarray(q), k=k, l=l
+            )
+            # every shard computed the same global merge; take shard 0's copy
+            return (np.asarray(ids)[0], np.asarray(shards)[0],
+                    np.asarray(dists)[0], int(np.asarray(comps).sum()))
+        if partition != "queries":
+            raise ValueError(f"unknown search partition {partition!r}")
+        n_q = q.shape[0]
+        per_shard = next_bucket(max(-(-n_q // self.n_shards), 1))
+        total = per_shard * self.n_shards
+        qpad = np.zeros((total, q.shape[1]), np.float32)
+        qpad[:n_q] = q
+        valid = np.zeros((total,), bool)
+        valid[:n_q] = True
+        ids, shards, dists, comps = self._search_part(
+            self.states,
+            jax.device_put(jnp.asarray(qpad), self._shard_spec),
+            jax.device_put(jnp.asarray(valid), self._shard_spec),
+            k=k, l=l,
         )
-        # every shard computed the same global merge; take shard 0's copy
-        return (np.asarray(ids)[0], np.asarray(shards)[0],
-                np.asarray(dists)[0], int(np.asarray(comps).sum()))
+        return (np.asarray(ids)[:n_q], np.asarray(shards)[:n_q],
+                np.asarray(dists)[:n_q], int(np.asarray(comps).sum()))

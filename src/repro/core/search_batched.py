@@ -248,9 +248,35 @@ def batched_greedy_search(
     )
 
 
+def merge_topk(dists_a, dists_b, k: int, *payload_pairs):
+    """Merge two per-lane candidate sets into the k best by distance.
+
+    ``dists_a``/``dists_b``: f32[..., Ka] / f32[..., Kb] (pad dead slots
+    with ``BIG`` so they lose every merge).  Each extra argument is an
+    ``(payload_a, payload_b)`` pair of integer arrays aligned with the
+    distances (ids, owner shards, ...); every payload rides the same merge
+    permutation.  Returns ``(dists[..., k], (payload[..., k], ...))``.
+
+    This is the sub-batch merge of the sharded query path: incremental —
+    ``merge_topk(running, incoming)`` after every shard hop keeps the carry
+    at width k instead of accumulating an (S*k) concat — and order-stable
+    for distinct distances (``lax.top_k`` on the concatenated axis), so an
+    incremental merge chain selects the same ids as one flat merge whenever
+    distances are tie-free.
+    """
+    d = jnp.concatenate([dists_a, dists_b], axis=-1)
+    top_d, idx = lax.top_k(-d, k)
+    outs = tuple(
+        jnp.take_along_axis(jnp.concatenate([pa, pb], axis=-1), idx, axis=-1)
+        for pa, pb in payload_pairs
+    )
+    return -top_d, outs
+
+
 __all__ = [
     "TRACE_COUNTER",
     "batched_greedy_search",
+    "merge_topk",
     "next_bucket",
     "pad_batch",
 ]

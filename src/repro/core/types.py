@@ -196,6 +196,20 @@ def noop_update_batch(b: int, dim: int) -> UpdateBatch:
     )
 
 
+def take_update_lanes(batch: UpdateBatch, idx) -> UpdateBatch:
+    """Gather the lanes ``idx`` (any integer index array) out of ``batch``.
+
+    Field-generic, so it works for numpy payloads (the host-side compact
+    routing in ``core/api.py``) and jax payloads alike; lane order follows
+    ``idx``."""
+    return UpdateBatch(
+        kind=batch.kind[idx],
+        ext_id=batch.ext_id[idx],
+        vector=batch.vector[idx],
+        valid=batch.valid[idx],
+    )
+
+
 def init_index_state(
     cfg: ANNConfig, max_external_id: int, dtype=jnp.float32
 ) -> IndexState:
