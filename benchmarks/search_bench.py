@@ -4,6 +4,10 @@ Measures the query path end to end at B in {1, 8, 64, 256}:
 
   * ``batched`` — the natively batched engine (core/search_batched.py):
     one shared hop loop, one fused (B, R) gather-distance tile per hop;
+  * ``fused``   — the same engine with multi-hop super-steps forced on
+    (``hop_fused=DEFAULT_FUSED_HOPS``): H hop bodies per while_loop
+    iteration, so the carry is threaded through the loop machinery 1/H
+    as often and XLA fuses across hop boundaries;
   * ``vmap``    — the pre-engine baseline ``search_batch_vmap``
     (vmap of the per-query while_loop: XLA runs every lane to the slowest
     lane's hop count AND select-masks the whole carry each hop);
@@ -19,8 +23,9 @@ by tests/test_search_batched.py.
 Timing is min-over-repeats of one blocked call (this container is a 1-core
 CPU box; min is the only robust estimator under scheduler noise).  Writes
 ``BENCH_search.json`` so the speedup is a recorded artifact; in --smoke
-mode a non-regression assertion requires the batched engine to be at least
-as fast as the vmap baseline at B >= 64.
+mode non-regression assertions require the batched engine to be at least
+as fast as the vmap baseline at B >= 64, and the fused super-steps to be
+no slower than the per-hop loop (within 10% CPU-timing slack).
 
 Usage: python -m benchmarks.search_bench [--smoke] [--out BENCH_search.json]
 """
@@ -70,6 +75,8 @@ def _bench(fn, repeat: int) -> float:
 
 def run_bench(n: int, dim: int, r: int, l: int, batches, k: int = 10,
               repeat: int = 3) -> dict:
+    import dataclasses
+
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -79,8 +86,12 @@ def run_bench(n: int, dim: int, r: int, l: int, batches, k: int = 10,
         brute_force_topk,
         search_batch_vmap,
     )
+    from repro.core.search_batched import DEFAULT_FUSED_HOPS
 
     cfg, state, rng = _make_state(n, dim, r)
+    # same engine, super-steps forced on (the pallas backend auto-selects
+    # this; on the CPU jnp backend it must be pinned to be measured)
+    fcfg = dataclasses.replace(cfg, hop_fused=DEFAULT_FUSED_HOPS)
     report = {
         "n": n, "dim": dim, "r": r, "l": l, "k": k, "repeat": repeat,
         "note": "random R-regular graph; min-of-repeats wall time; "
@@ -92,6 +103,9 @@ def run_bench(n: int, dim: int, r: int, l: int, batches, k: int = 10,
         bat = jax.jit(
             lambda s, q: batched_greedy_search(s, cfg, q, k=k, l=l)
         )
+        fu = jax.jit(
+            lambda s, q: batched_greedy_search(s, fcfg, q, k=k, l=l)
+        )
         vm = jax.jit(
             lambda s, q: search_batch_vmap(s, cfg, q, k=k, l=l)
         )
@@ -101,18 +115,26 @@ def run_bench(n: int, dim: int, r: int, l: int, batches, k: int = 10,
         # traversal parity is a precondition for the timing to mean anything
         ids_b = np.asarray(bat(state, qs).topk_ids)
         ids_v = np.asarray(vm(state, qs).topk_ids)
+        ids_f = np.asarray(fu(state, qs).topk_ids)
         assert np.array_equal(ids_b, ids_v), (
             f"batched/vmap traversal diverged at B={b}"
         )
+        assert np.array_equal(ids_b, ids_f), (
+            f"fused super-steps diverged from per-hop engine at B={b}"
+        )
         t_bat = _bench(lambda: bat(state, qs), repeat)
+        t_fu = _bench(lambda: fu(state, qs), repeat)
         t_vm = _bench(lambda: vm(state, qs), repeat)
         t_br = _bench(lambda: br(state, qs), repeat)
         report["batch"][str(b)] = {
             "batched_ms": t_bat * 1e3,
+            "fused_ms": t_fu * 1e3,
             "vmap_ms": t_vm * 1e3,
             "brute_ms": t_br * 1e3,
             "speedup_batched_over_vmap": t_vm / t_bat,
+            "speedup_fused_over_batched": t_bat / t_fu,
             "batched_qps": b / t_bat,
+            "fused_qps": b / t_fu,
             "vmap_qps": b / t_vm,
         }
     return report
@@ -140,7 +162,9 @@ def run(out_path: str = "BENCH_search.json", smoke: bool = False) -> List[Row]:
             f"search_bench.B{b}",
             stats["batched_ms"] * 1e3,
             f"speedup_over_vmap={stats['speedup_batched_over_vmap']:.2f};"
+            f"fused_over_batched={stats['speedup_fused_over_batched']:.2f};"
             f"batched_qps={stats['batched_qps']:.0f};"
+            f"fused_qps={stats['fused_qps']:.0f};"
             f"brute_ms={stats['brute_ms']:.1f}",
         ))
     rows.append(Row("search_bench.report", 0.0, f"written={out_path}"))
@@ -154,6 +178,13 @@ def run(out_path: str = "BENCH_search.json", smoke: bool = False) -> List[Row]:
                     f"batched engine regressed at B={b}: "
                     f"{stats['batched_ms']:.1f} ms vs vmap "
                     f"{stats['vmap_ms']:.1f} ms"
+                )
+                # the multi-hop super-step must not lose to the per-hop
+                # loop it wraps (10% slack: CPU timings on a 1-core box)
+                assert stats["fused_ms"] <= stats["batched_ms"] * 1.10, (
+                    f"fused super-steps regressed at B={b}: "
+                    f"{stats['fused_ms']:.1f} ms vs per-hop "
+                    f"{stats['batched_ms']:.1f} ms"
                 )
     return rows
 

@@ -60,7 +60,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .batched import insert_many_batched, ip_delete_many_batched
-from .consolidate import consolidation_due, fresh_consolidate, light_consolidate
+from .consolidate import (
+    LIGHT_CONSOLIDATE_FIELDS,
+    consolidation_due,
+    fresh_consolidate,
+    light_consolidate,
+    light_consolidate_fields,
+)
 from .delete import ip_delete_many, lazy_delete_many
 from .insert import insert_many
 from .search import search_batch
@@ -86,6 +92,32 @@ from .types import (
 # the bucketing regression tests assert ragged batch sizes — and ragged
 # segment lengths — share one compiled program per bucket.
 TRACE_COUNTER = {"apply": 0, "apply_segment": 0}
+
+# (T, B) -> resolved unroll, recorded each time ``apply_segment`` traces
+# with ``unroll=None``; the auto-unroll regression test pins the bucket
+# keys actually chosen.
+TRACE_UNROLL = {}
+
+
+def auto_unroll(t: int, b: int) -> int:
+    """Size-aware default ``lax.scan`` unroll for a (T, B) update segment.
+
+    Cross-op fusion is worth most exactly where each op is small: the
+    per-op work of a narrow-lane segment underfills the machine, so
+    unrolling a few ops per loop iteration lets XLA fuse across op
+    boundaries (measured ~5-9% on the update bench).  Wide-lane segments
+    already saturate per op, and unrolling only multiplies compile time —
+    so the factor steps down as B grows and is 1 past B=256.  Callers pin
+    ``unroll`` explicitly to override."""
+    if t <= 1:
+        return 1
+    if b <= 16:
+        return min(8, t)
+    if b <= 64:
+        return min(4, t)
+    if b <= 256:
+        return min(2, t)
+    return 1
 
 
 def clone_state(state):
@@ -120,6 +152,19 @@ class UpdatePolicy:
     # streams only surface a ``needs_consolidation`` flag and the host runs
     # it between segments.
     device_consolidation = False
+    # Device policies whose pass touches only a few GraphState fields name
+    # them here (with a matching ``consolidate_narrow``): ``device_sweep``
+    # then conds over just those operands instead of the whole state —
+    # on CPU a lax.cond copies every carried operand per step, so keeping
+    # the multi-MB vector table out of the branch is the whole win.
+    # None = the pass may touch anything; the cond carries the full state.
+    consolidation_fields: Optional[tuple] = None
+
+    def consolidate_narrow(self, cfg: ANNConfig, sub: tuple) -> tuple:
+        """``consolidate`` restricted to the ``consolidation_fields`` tuple
+        (same order in and out).  Must be un-jitted traced code so the
+        narrowed ``lax.cond`` branch stays narrow."""
+        raise NotImplementedError
 
     def delete_many(self, graph: GraphState, cfg: ANNConfig, ps,
                     *, sequential: bool):
@@ -183,6 +228,7 @@ class IPDiskANNPolicy(UpdatePolicy):
     The sweep is pure device code, so compiled streams run it inline."""
 
     device_consolidation = True
+    consolidation_fields = LIGHT_CONSOLIDATE_FIELDS
 
     def delete_many(self, graph, cfg, ps, *, sequential):
         fn = ip_delete_many if sequential else ip_delete_many_batched
@@ -190,6 +236,9 @@ class IPDiskANNPolicy(UpdatePolicy):
 
     def consolidate(self, graph, cfg):
         return light_consolidate(graph, cfg)
+
+    def consolidate_narrow(self, cfg, sub):
+        return light_consolidate_fields(cfg, *sub)
 
 
 @register_policy("fresh")
@@ -559,10 +608,24 @@ def device_sweep(graph: GraphState, cfg: ANNConfig, pol: UpdatePolicy,
     """Run ``pol``'s device consolidation pass under ``lax.cond`` when the
     traced ``trig`` scalar is set.  THE one cond site every device-trigger
     path shares (per-op ``consolidate_if_needed``, the segment scan, the
-    sharded per-op update) — so trigger semantics cannot diverge."""
-    return jax.lax.cond(
-        trig, lambda g: pol.consolidate(g, cfg), lambda g: g, graph
+    sharded per-op update) — so trigger semantics cannot diverge.
+
+    Policies that declare ``consolidation_fields`` get a NARROW cond: only
+    those fields are operands/results of the branches, the untouched
+    leaves (the (n_cap, dim) vector table above all) bypass it entirely —
+    the full-state reassembly happens out here, past the cond.  The
+    branches must not close over the full state, or tracing would hoist
+    the closed-over leaves right back into the cond's operands."""
+    fields = pol.consolidation_fields
+    if fields is None:
+        return jax.lax.cond(
+            trig, lambda g: pol.consolidate(g, cfg), lambda g: g, graph
+        )
+    sub = tuple(getattr(graph, f) for f in fields)
+    out = jax.lax.cond(
+        trig, lambda s: pol.consolidate_narrow(cfg, s), lambda s: s, sub
     )
+    return graph._replace(**dict(zip(fields, out)))
 
 
 @functools.partial(
@@ -664,7 +727,7 @@ def apply_segment(
     sequential: bool = False,
     split: Optional[int] = None,
     consolidate: bool = True,
-    unroll: int = 1,
+    unroll: Optional[int] = None,
 ):
     """Run a whole update-stream segment — an ``UpdateBatch`` with a leading
     (T,) op axis — as ONE compiled program: ``lax.scan`` of the ``apply``
@@ -687,12 +750,19 @@ def apply_segment(
     are no-ops) so ragged segment lengths share buckets.
 
     ``consolidate=False`` statically drops the per-op trigger from the
-    stream, and ``unroll > 1`` trades compile time for fusion across op
-    boundaries (see ``segment_scan`` for both).
+    stream, and ``unroll`` trades compile time for fusion across op
+    boundaries (see ``segment_scan``).  The default ``unroll=None``
+    resolves per (T, B) bucket via ``auto_unroll`` — deeper unrolls for
+    narrow-lane segments, none for wide ones — recorded in
+    ``TRACE_UNROLL`` at trace time; pass an int to pin it.
 
     ``state`` is donated, as with ``apply``.
     """
     TRACE_COUNTER["apply_segment"] += 1
+    t, b = ops.kind.shape
+    if unroll is None:
+        unroll = auto_unroll(t, b)
+        TRACE_UNROLL[(t, b)] = unroll
     return segment_scan(state, cfg, ops, get_policy(policy), sequential,
                         split, consolidate, unroll)
 
@@ -774,7 +844,7 @@ def run_segments(
     *,
     policy: str = "ip",
     sequential: bool = False,
-    unroll: int = 1,
+    unroll: Optional[int] = None,
 ):
     """Execute a ``SegmentPlan``, threading the carry state across segments.
 
@@ -851,11 +921,13 @@ def maybe_consolidate(
 
 __all__ = [
     "TRACE_COUNTER",
+    "TRACE_UNROLL",
     "Segment",
     "SegmentPlan",
     "UpdatePolicy",
     "apply",
     "apply_segment",
+    "auto_unroll",
     "available_policies",
     "clone_state",
     "compact_owner_batch",

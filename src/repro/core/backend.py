@@ -86,6 +86,23 @@ class DistanceBackend:
             lambda q, row: self.dists_to_ids(state, cfg, q, row)
         )(queries, ids)
 
+    def beam_superstep(self, state: GraphState, cfg: ANNConfig, queries,
+                       carry, *, h: int, l: int, max_visits: int):
+        """Advance the batched beam engine's carry by ``h`` hops in one
+        step (``core/search_batched.py``; carry is its ``_BLoop``).  A lane
+        whose frontier is exhausted must be an exact no-op for the extra
+        hops — that invariant is what lets ``batched_greedy_search`` run a
+        while_loop of super-steps with unchanged traversal.  Default: h
+        compositions of the shared jnp hop body over this backend's
+        ``dists_to_ids_batched``; engines with a fused multi-hop kernel
+        override it."""
+        from .search_batched import superstep_reference
+
+        return superstep_reference(
+            self.dists_to_ids_batched, state, cfg, queries, carry,
+            h=h, l=l, max_visits=max_visits,
+        )
+
     # -- gathered-tile math (prune / delete) --------------------------------
 
     def dists_from_rows(self, cfg: ANNConfig, q, q_norm, rows, row_norms):
@@ -229,6 +246,27 @@ class PallasBackend(JnpBackend):
             ids, queries, state.vectors, norms=state.norms,
             metric=cfg.metric, interpret=self.interpret,
         )
+
+    def beam_superstep(self, state, cfg, queries, carry, *, h, l,
+                       max_visits):
+        from . import bitset
+        from .types import navigable
+        from ..kernels import ops
+
+        # cheap O(n_cap) elementwise packs of the loop-invariant masks;
+        # dwarfed by the O(B * R * D) distance math of the h hops
+        nav_words = bitset.pack_bits(navigable(state))
+        ret_words = bitset.pack_bits(state.active)
+        out = ops.beam_hop(
+            queries, carry.beam_ids, carry.beam_dists,
+            carry.beam_exp.astype(jnp.int32), carry.seen, carry.vis_ids,
+            carry.vis_dists, carry.n_vis, carry.n_comps, carry.n_hops,
+            state.adj, state.vectors, state.norms, nav_words, ret_words,
+            metric=cfg.metric, h=h, interpret=self.interpret,
+        )
+        bi, bd, be, seen, vi, vd, n_vis, n_comps, n_hops = out
+        return type(carry)(bi, bd, be != 0, seen, vi, vd, n_vis, n_comps,
+                           n_hops)
 
     def brute_force_topk(self, state, cfg, queries, *, k):
         from ..kernels import ops

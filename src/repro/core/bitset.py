@@ -1,0 +1,122 @@
+"""Bitpacked visited sets for the batched beam engine.
+
+The shared hop loop used to carry a ``bool[B, n_cap]`` seen bitmap through
+``lax.while_loop`` — at n_cap = 65536 that is 64 KiB of carry traffic per
+lane per hop on a bitmap whose information content is 1 bit per slot.
+This module packs it to ``uint32[B, ceil(n_cap / 32)]``: an 8x cut in the
+bitmap's memory traffic, and a representation the fused multi-hop Pallas
+kernel (``kernels/beam_hop.py``) can hold resident in VMEM.
+
+The one non-trivial operation is the per-hop scatter-OR ("mark these ids
+seen").  JAX has no scatter-or primitive, but a bit-decomposed scatter-ADD
+is exact whenever each (row, id) pair is written at most once — each id
+contributes its single bit to its word exactly once, so the adds compose
+as an OR.  Adjacency rows may carry duplicate neighbour ids (nothing in
+the engine forbids them, and the parity tests exercise them), so
+``setbits_rows`` first masks every duplicate down to its first occurrence
+per row; marking an id once is identical to the bool path's idempotent
+``.set(True)``.
+
+All ids passed to ``getbit``/``getbit_rows``/``setbits_rows`` must already
+be clipped to ``[0, n_cap)`` (the engine's ``clip_ids`` discipline); the
+masks decide whether a lane participates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def n_words(n_cap: int) -> int:
+    """Packed words per row for an ``n_cap``-slot bitmap (ceil division:
+    n_cap need not be a multiple of 32 — the tail bits stay zero)."""
+    return (n_cap + WORD_BITS - 1) // WORD_BITS
+
+
+def empty_rows(b: int, n_cap: int) -> jnp.ndarray:
+    """An all-clear packed bitmap: u32[b, n_words(n_cap)]."""
+    return jnp.zeros((b, n_words(n_cap)), jnp.uint32)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a bool[..., n] mask to u32[..., n_words(n)] (little-endian bits:
+    slot i lives at word i >> 5, bit i & 31 — the same layout every other
+    helper here uses)."""
+    n = bits.shape[-1]
+    w = n_words(n)
+    pad = w * WORD_BITS - n
+    if pad:
+        widths = [(0, 0)] * (bits.ndim - 1) + [(0, pad)]
+        bits = jnp.pad(bits, widths, constant_values=False)
+    weights = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    grouped = bits.reshape(bits.shape[:-1] + (w, WORD_BITS))
+    return jnp.sum(
+        jnp.where(grouped, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32
+    )
+
+
+def getbit(words: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """bool test of bits ``ids`` (any shape, values in [0, n_cap)) against
+    ONE packed u32[W] bitmap (e.g. the packed navigable/returnable masks)."""
+    w = words[ids >> 5]
+    return ((w >> (ids & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+def getbit_rows(seen: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Row-aligned bit test: ``seen`` u32[B, W], ``ids`` i32[B, K] (values
+    in [0, n_cap)); returns bool[B, K] — the packed equivalent of the old
+    ``seen[bidx[:, None], ids]`` bool gather."""
+    bidx = jnp.arange(seen.shape[0])[:, None]
+    w = seen[bidx, ids >> 5]
+    return ((w >> (ids & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+def setbits_rows(seen: jnp.ndarray, ids: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """OR the bits of masked-in ids into each row of a packed bitmap.
+
+    ``seen`` u32[B, W]; ``ids`` i32[B, K] in [0, n_cap); ``mask`` bool[B, K]
+    selects which entries to mark.  The bit-decomposed scatter-ADD below is
+    a true scatter-OR only when each scattered bit lands exactly once on a
+    clear position — a second add would carry into the next bit — so two
+    filters make it exact: in-row duplicate ids keep only their first
+    masked-in occurrence, and ids whose bit is already set in ``seen``
+    drop entirely (an OR of a set bit is a no-op anyway).
+    """
+    k = ids.shape[-1]
+    # dup[b, j] = some earlier masked-in entry i < j carries the same id
+    earlier = jnp.tril(jnp.ones((k, k), bool), k=-1)        # [j, i]: i < j
+    dup = jnp.any(
+        (ids[:, :, None] == ids[:, None, :]) & mask[:, None, :] & earlier,
+        axis=-1,
+    )
+    first = mask & ~dup & ~getbit_rows(seen, ids)
+    w = seen.shape[-1]
+    word = jnp.where(first, ids >> 5, w)                    # w => dropped
+    bit = jnp.where(
+        first,
+        jnp.uint32(1) << (ids & 31).astype(jnp.uint32),
+        jnp.uint32(0),
+    )
+    bidx = jnp.arange(seen.shape[0])[:, None]
+    return seen.at[bidx, word].add(bit, mode="drop")
+
+
+def unpack_rows(seen: jnp.ndarray, n_cap: int) -> jnp.ndarray:
+    """Expand u32[B, W] back to bool[B, n_cap] (tests / debugging)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (seen[..., :, None] >> shifts) & jnp.uint32(1)   # (B, W, 32)
+    return (bits != 0).reshape(seen.shape[0], -1)[:, :n_cap]
+
+
+__all__ = [
+    "WORD_BITS",
+    "empty_rows",
+    "getbit",
+    "getbit_rows",
+    "n_words",
+    "pack_bits",
+    "setbits_rows",
+    "unpack_rows",
+]

@@ -44,31 +44,52 @@ def consolidation_due(state: GraphState, cfg: ANNConfig) -> jax.Array:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def light_consolidate(state: GraphState, cfg: ANNConfig) -> GraphState:
-    """Algorithm 6: remove dangling edges, free quarantined slots."""
-    adj = state.adj
-    dead = state.quarantine[clip_ids(adj, cfg.n_cap)] & (adj >= 0)
+# The exact GraphState fields Algorithm 6 reads and writes.  Streams that
+# run the sweep under ``lax.cond`` (``core/api.py::device_sweep``) narrow
+# the cond's operands to this tuple, so the untouched multi-MB leaves
+# (vectors, norms, active, ...) never ride the branch — on CPU a cond
+# copies every carried operand each step even when the branch never fires.
+LIGHT_CONSOLIDATE_FIELDS = (
+    "adj", "quarantine", "free_stack", "free_top", "n_pending"
+)
+
+
+def light_consolidate_fields(cfg: ANNConfig, adj, quarantine, free_stack,
+                             free_top, n_pending):
+    """Algorithm 6 on exactly the fields it touches; returns the updated
+    ``LIGHT_CONSOLIDATE_FIELDS`` tuple.  Un-jitted on purpose: callers
+    embed it in larger programs (the narrowed ``lax.cond`` branch) where a
+    nested jit would re-widen the operand set."""
+    dead = quarantine[clip_ids(adj, cfg.n_cap)] & (adj >= 0)
     adj = jnp.where(dead, INVALID, adj)
     adj = jax.vmap(compact_row)(adj)
 
     # release quarantined slots onto the free stack
     n = cfg.n_cap
-    q_idx = jnp.where(state.quarantine, jnp.arange(n, dtype=jnp.int32), n)
+    q_idx = jnp.where(quarantine, jnp.arange(n, dtype=jnp.int32), n)
     q_sorted = jnp.sort(q_idx)                      # quarantined ids first
-    n_q = jnp.sum(state.quarantine).astype(jnp.int32)
-    pos = state.free_top + jnp.arange(n, dtype=jnp.int32)
+    n_q = jnp.sum(quarantine).astype(jnp.int32)
+    pos = free_top + jnp.arange(n, dtype=jnp.int32)
     pos = jnp.where(jnp.arange(n) < n_q, pos, n)    # only first n_q written
-    free_stack = state.free_stack.at[pos].set(
+    free_stack = free_stack.at[pos].set(
         q_sorted.astype(jnp.int32), mode="drop"
     )
-    return state._replace(
-        adj=adj,
-        quarantine=jnp.zeros_like(state.quarantine),
-        free_stack=free_stack,
-        free_top=state.free_top + n_q,
-        n_pending=jnp.int32(0),
+    return (
+        adj,
+        jnp.zeros_like(quarantine),
+        free_stack,
+        free_top + n_q,
+        jnp.int32(0),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def light_consolidate(state: GraphState, cfg: ANNConfig) -> GraphState:
+    """Algorithm 6: remove dangling edges, free quarantined slots."""
+    out = light_consolidate_fields(
+        cfg, *(getattr(state, f) for f in LIGHT_CONSOLIDATE_FIELDS)
+    )
+    return state._replace(**dict(zip(LIGHT_CONSOLIDATE_FIELDS, out)))
 
 
 # ---------------------------------------------------------------------------

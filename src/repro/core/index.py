@@ -226,7 +226,7 @@ class StreamingIndex:
             )
 
     def apply_segments(self, steps, *, splits=None, max_t: int = 64,
-                       sequential: bool = False, unroll: int = 1):
+                       sequential: bool = False, unroll=None):
         """Run a list of ``UpdateBatch`` ops as whole-segment compiled
         streams: one device dispatch per (T, B)-bucketed segment instead of
         one per op (``core/api.py::apply_segment``).

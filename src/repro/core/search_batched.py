@@ -4,14 +4,16 @@
 ``lax.while_loop``.  XLA batches a vmapped while_loop by running the body for
 *every* lane until the slowest lane terminates and then ``select``-ing the
 old carry back in for lanes whose predicate went false — so each hop pays a
-full-carry masked copy (the ``(B, n_cap)`` seen bitmaps and ``(B, max_visits)``
-visited lists dominate), and the per-lane neighbour gather stays B separate
-``(R,)`` random HBM reads that the Pallas kernel cannot coalesce.
+full-carry masked copy (the seen bitmaps and ``(B, max_visits)`` visited
+lists dominate), and the per-lane neighbour gather stays B separate ``(R,)``
+random HBM reads that the Pallas kernel cannot coalesce.
 
 This module carries the batch natively instead:
 
-  * one ``(B, l)`` beam (ids / dists / expanded), one ``(B, n_cap)`` seen
-    bitmap, one ``(B, max_visits)`` visited list;
+  * one ``(B, l)`` beam (ids / dists / expanded), one BITPACKED
+    ``uint32[B, ceil(n_cap/32)]`` seen bitmap (``core/bitset.py`` — 8x less
+    carry traffic than the old bool[B, n_cap]), one ``(B, max_visits)``
+    visited list;
   * a single shared ``lax.while_loop`` whose predicate is "any lane still has
     an unexpanded frontier"; converged lanes are masked per-op (their pops
     become no-ops and their counters freeze) rather than per-carry, so no
@@ -20,14 +22,27 @@ This module carries the batch natively instead:
     ``(B, R)`` id tile through ``DistanceBackend.dists_to_ids_batched`` (the
     2-D-grid Pallas gather kernel on TPU: one launch per hop, not B).
 
+Hop fusion (``ANNConfig.hop_fused``): the while_loop can drive H hops per
+iteration ("super-steps") instead of one.  The hop body is an exact no-op
+for a lane whose frontier is exhausted (its pop is masked, its counters
+freeze, the sort-merge re-sorts an unchanged beam against all-inf
+neighbours), so grouping hops never changes any lane's traversal — it only
+amortizes the loop's termination check and lets the engine fuse across hop
+boundaries.  The super-step itself is a ``DistanceBackend`` surface
+(``beam_superstep``): the default runs H compositions of the shared jnp hop
+body; the pallas engine overrides it with the fused multi-hop kernel
+(``kernels/beam_hop.py``) that keeps the (B, l) beam resident in VMEM
+across all H hops with per-lane early exit.  ``hop_fused = -1`` (default)
+auto-enables fusion exactly where the pallas engine is selected.
+
 Per lane, the traversal is identical to per-query ``greedy_search``: the
 pop order, tie-breaks (first-minimum argmin, stable sort-merge), visited
 accounting, comparison counts and hop counts all follow the same ops, just
 with a leading batch axis — so ``topk_ids``/``visited_ids``/``n_comps``/
 ``n_hops`` match exactly (distances agree to f32 tolerance: XLA reduces a
 batched matmul in a different order than a single matvec, exactly as the
-old vmap formulation already did).  ``tests/test_search_batched.py`` pins
-this lane-by-lane.
+old vmap formulation already did).  ``tests/test_search_batched.py`` and
+``tests/test_beam_fused.py`` pin this lane-by-lane.
 
 Batch-size bucketing: streaming callers present ragged batch sizes; every
 distinct B is a distinct jit specialization of the whole loop.  ``pad_batch``
@@ -43,6 +58,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import bitset
 from .backend import BIG, resolve_backend
 from .search import SearchResult
 from .types import INVALID, ANNConfig, GraphState, clip_ids, navigable
@@ -51,12 +67,16 @@ from .types import INVALID, ANNConfig, GraphState, clip_ids, navigable
 # bucketing regression test asserts ragged batch sizes share one compile.
 TRACE_COUNTER = {"batched_greedy_search": 0}
 
+# Hops per super-step when ``cfg.hop_fused`` resolves to auto AND the
+# pallas engine is selected (see ``resolved_hop_fused``).
+DEFAULT_FUSED_HOPS = 4
+
 
 class _BLoop(NamedTuple):
     beam_ids: jax.Array    # i32[B, l]
     beam_dists: jax.Array  # f32[B, l]
     beam_exp: jax.Array    # bool[B, l]
-    seen: jax.Array        # bool[B, n_cap]
+    seen: jax.Array        # u32[B, ceil(n_cap/32)]  bitpacked (core/bitset.py)
     vis_ids: jax.Array     # i32[B, max_visits]
     vis_dists: jax.Array   # f32[B, max_visits]
     n_vis: jax.Array       # i32[B]
@@ -77,88 +97,60 @@ def next_bucket(b: int) -> int:
     return p
 
 
-def pad_batch(arr, b: int, fill=0.0):
-    """Pad the leading axis of ``arr`` up to the bucket for ``b`` lanes."""
+def pad_batch(arr, b: int, fill=None):
+    """Pad the leading axis of ``arr`` up to the bucket for ``b`` lanes.
+
+    ``fill`` defaults by dtype: ``INVALID`` for integer payloads (id
+    arrays — a float 0.0 fill would silently truncate to slot id 0, a
+    VALID slot), ``False`` for bools, ``0.0`` for floats.  Pass ``fill``
+    explicitly to override.
+    """
     bucket = next_bucket(b)
     if arr.shape[0] == bucket:
         return arr
+    if fill is None:
+        if jnp.issubdtype(arr.dtype, jnp.integer):
+            fill = INVALID
+        elif jnp.issubdtype(arr.dtype, jnp.bool_):
+            fill = False
+        else:
+            fill = 0.0
     pad = [(0, bucket - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
     return jnp.pad(arr, pad, constant_values=fill)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "k", "l", "max_visits", "distance_fn")
-)
-def batched_greedy_search(
-    state: GraphState,
-    cfg: ANNConfig,
-    queries: jax.Array,          # f32[B, dim]
-    *,
-    k: int,
-    l: int,
-    max_visits: Optional[int] = None,
-    distance_fn: Optional[BatchedDistanceFn] = None,
-    valid: Optional[jax.Array] = None,
-) -> SearchResult:
-    """GreedySearch (Algorithm 1) for B queries in one shared hop loop.
+def resolved_hop_fused(cfg: ANNConfig) -> int:
+    """The engine's hops-per-super-step: ``cfg.hop_fused`` when pinned
+    (0 = unfused), else auto — ``DEFAULT_FUSED_HOPS`` exactly where the
+    pallas engine is the resolved backend (the fused kernel's home; the
+    jnp/ref engines default unfused, matching the pre-fusion engine)."""
+    if cfg.hop_fused >= 0:
+        return cfg.hop_fused
+    return DEFAULT_FUSED_HOPS if resolve_backend(cfg).name == "pallas" else 0
 
-    Returns a ``SearchResult`` whose leaves carry a leading batch axis;
-    per lane the traversal (ids and counters) is identical to
-    ``greedy_search`` on that lane's query.
-    ``distance_fn`` (batched signature: ``(state, cfg, (B, D) queries,
-    (B, M) ids) -> (B, M)``) overrides the engine's
-    ``dists_to_ids_batched`` for experiments.
-    ``valid`` (bool[B]) masks whole lanes out of the traversal: a masked
-    lane starts with an empty beam, performs no distance computations, adds
-    no hops to the shared loop and returns all-INVALID results — the
-    mechanism bucket-padded callers (``search_batch``, ``core/api.py``) use
-    to make padding lanes free.
-    """
-    TRACE_COUNTER["batched_greedy_search"] += 1
-    if max_visits is None:
-        max_visits = cfg.max_visits(l)
-    dist_fn = distance_fn or resolve_backend(cfg).dists_to_ids_batched
+
+def make_hop_body(state: GraphState, cfg: ANNConfig, queries: jax.Array,
+                  dist_fn: BatchedDistanceFn, *, l: int, max_visits: int):
+    """The shared per-hop transition ``_BLoop -> _BLoop`` of the batched
+    beam engine.  Both engines compose it: the unfused loop runs it once
+    per while_loop iteration, ``superstep_reference`` runs H back-to-back
+    compositions per iteration.  A lane with no unexpanded frontier (or at
+    its hop bound) is an EXACT no-op — pops mask out, counters freeze, and
+    the stable sort-merge against all-inf neighbours returns the beam
+    unchanged — which is what makes hop grouping traversal-neutral."""
     nav = navigable(state)
     returnable = state.active
-
     b = queries.shape[0]
     bidx = jnp.arange(b)
-    starts = jnp.broadcast_to(state.start, (b,))
-    if valid is not None:
-        starts = jnp.where(valid, starts, INVALID)
-    d0 = dist_fn(state, cfg, queries, starts[:, None])[:, 0]
 
-    beam_ids = jnp.full((b, l), INVALID, jnp.int32).at[:, 0].set(starts)
-    beam_dists = jnp.full((b, l), BIG, jnp.float32).at[:, 0].set(
-        jnp.where(starts >= 0, d0, BIG)
-    )
-    seen = jnp.zeros((b, cfg.n_cap), bool).at[
-        bidx, clip_ids(starts, cfg.n_cap)
-    ].set(starts >= 0)
-
-    init = _BLoop(
-        beam_ids=beam_ids,
-        beam_dists=beam_dists,
-        beam_exp=jnp.zeros((b, l), bool),
-        seen=seen,
-        vis_ids=jnp.full((b, max_visits), INVALID, jnp.int32),
-        vis_dists=jnp.full((b, max_visits), BIG, jnp.float32),
-        n_vis=jnp.zeros((b,), jnp.int32),
-        n_comps=jnp.where(starts >= 0, 1, 0).astype(jnp.int32),
-        n_hops=jnp.zeros((b,), jnp.int32),
-    )
-
-    def lane_active(s: _BLoop):
-        frontier = (
-            (s.beam_ids >= 0) & ~s.beam_exp & jnp.isfinite(s.beam_dists)
+    def hop(s: _BLoop) -> _BLoop:
+        active = (
+            jnp.any(
+                (s.beam_ids >= 0) & ~s.beam_exp & jnp.isfinite(s.beam_dists),
+                axis=1,
+            )
+            & (s.n_hops < max_visits)
         )
-        return jnp.any(frontier, axis=1) & (s.n_hops < max_visits)
-
-    def cond(s: _BLoop):
-        return jnp.any(lane_active(s))
-
-    def body(s: _BLoop):
-        active = lane_active(s)                                    # bool[B]
 
         # --- pop each lane's closest unexpanded vertex -----------------------
         frontier_d = jnp.where(
@@ -183,15 +175,13 @@ def batched_greedy_search(
         fresh = (
             (nbrs >= 0)
             & nav[safe_nbrs]
-            & ~s.seen[bidx[:, None], safe_nbrs]
+            & ~bitset.getbit_rows(s.seen, safe_nbrs)
             & active[:, None]
         )
         masked = jnp.where(fresh, nbrs, INVALID)
         nd = dist_fn(state, cfg, queries, masked)                  # (B, R)
         n_comps = s.n_comps + jnp.sum(fresh, axis=1).astype(jnp.int32)
-        seen = s.seen.at[
-            bidx[:, None], jnp.where(fresh, nbrs, cfg.n_cap)
-        ].set(True, mode="drop")
+        seen = bitset.setbits_rows(s.seen, safe_nbrs, fresh)
 
         # --- sort-merge beams + neighbours, keep top-l per lane --------------
         # (id, expanded) ride the stable key sort as ONE packed int32 payload
@@ -219,6 +209,113 @@ def batched_greedy_search(
             n_comps=n_comps,
             n_hops=s.n_hops + active.astype(jnp.int32),
         )
+
+    return hop
+
+
+def superstep_reference(dist_fn: BatchedDistanceFn, state: GraphState,
+                        cfg: ANNConfig, queries: jax.Array,
+                        carry: _BLoop, *, h: int, l: int,
+                        max_visits: int) -> _BLoop:
+    """The pure-jnp H-hop super-step: exactly ``h`` compositions of the
+    shared hop body, unrolled so XLA can fuse across hop boundaries.  This
+    is both ``DistanceBackend.beam_superstep``'s default implementation and
+    the oracle the fused Pallas kernel is verified against — per lane it IS
+    the unfused engine, re-grouped."""
+    hop = make_hop_body(state, cfg, queries, dist_fn, l=l,
+                        max_visits=max_visits)
+    for _ in range(h):
+        carry = hop(carry)
+    return carry
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "k", "l", "max_visits", "distance_fn")
+)
+def batched_greedy_search(
+    state: GraphState,
+    cfg: ANNConfig,
+    queries: jax.Array,          # f32[B, dim]
+    *,
+    k: int,
+    l: int,
+    max_visits: Optional[int] = None,
+    distance_fn: Optional[BatchedDistanceFn] = None,
+    valid: Optional[jax.Array] = None,
+) -> SearchResult:
+    """GreedySearch (Algorithm 1) for B queries in one shared hop loop.
+
+    Returns a ``SearchResult`` whose leaves carry a leading batch axis;
+    per lane the traversal (ids and counters) is identical to
+    ``greedy_search`` on that lane's query.
+    ``distance_fn`` (batched signature: ``(state, cfg, (B, D) queries,
+    (B, M) ids) -> (B, M)``) overrides the engine's
+    ``dists_to_ids_batched`` for experiments (and routes hop fusion
+    through the generic super-step instead of a backend kernel).
+    ``valid`` (bool[B]) masks whole lanes out of the traversal: a masked
+    lane starts with an empty beam, performs no distance computations, adds
+    no hops to the shared loop and returns all-INVALID results — the
+    mechanism bucket-padded callers (``search_batch``, ``core/api.py``) use
+    to make padding lanes free.
+    """
+    TRACE_COUNTER["batched_greedy_search"] += 1
+    if max_visits is None:
+        max_visits = cfg.max_visits(l)
+    backend = resolve_backend(cfg)
+    dist_fn = distance_fn or backend.dists_to_ids_batched
+    returnable = state.active
+
+    b = queries.shape[0]
+    starts = jnp.broadcast_to(state.start, (b,))
+    if valid is not None:
+        starts = jnp.where(valid, starts, INVALID)
+    d0 = dist_fn(state, cfg, queries, starts[:, None])[:, 0]
+
+    beam_ids = jnp.full((b, l), INVALID, jnp.int32).at[:, 0].set(starts)
+    beam_dists = jnp.full((b, l), BIG, jnp.float32).at[:, 0].set(
+        jnp.where(starts >= 0, d0, BIG)
+    )
+    seen = bitset.setbits_rows(
+        bitset.empty_rows(b, cfg.n_cap),
+        clip_ids(starts, cfg.n_cap)[:, None],
+        (starts >= 0)[:, None],
+    )
+
+    init = _BLoop(
+        beam_ids=beam_ids,
+        beam_dists=beam_dists,
+        beam_exp=jnp.zeros((b, l), bool),
+        seen=seen,
+        vis_ids=jnp.full((b, max_visits), INVALID, jnp.int32),
+        vis_dists=jnp.full((b, max_visits), BIG, jnp.float32),
+        n_vis=jnp.zeros((b,), jnp.int32),
+        n_comps=jnp.where(starts >= 0, 1, 0).astype(jnp.int32),
+        n_hops=jnp.zeros((b,), jnp.int32),
+    )
+
+    def lane_active(s: _BLoop):
+        frontier = (
+            (s.beam_ids >= 0) & ~s.beam_exp & jnp.isfinite(s.beam_dists)
+        )
+        return jnp.any(frontier, axis=1) & (s.n_hops < max_visits)
+
+    def cond(s: _BLoop):
+        return jnp.any(lane_active(s))
+
+    h = resolved_hop_fused(cfg)
+    if h <= 0:
+        body = make_hop_body(state, cfg, queries, dist_fn, l=l,
+                             max_visits=max_visits)
+    elif distance_fn is not None:
+        # a custom distance_fn has no kernel; fuse through the generic
+        # super-step so the override still sees every hop's distances
+        def body(s):
+            return superstep_reference(dist_fn, state, cfg, queries, s,
+                                       h=h, l=l, max_visits=max_visits)
+    else:
+        def body(s):
+            return backend.beam_superstep(state, cfg, queries, s, h=h,
+                                          l=l, max_visits=max_visits)
 
     out = lax.while_loop(cond, body, init)
 
@@ -274,9 +371,13 @@ def merge_topk(dists_a, dists_b, k: int, *payload_pairs):
 
 
 __all__ = [
+    "DEFAULT_FUSED_HOPS",
     "TRACE_COUNTER",
     "batched_greedy_search",
+    "make_hop_body",
     "merge_topk",
     "next_bucket",
     "pad_batch",
+    "resolved_hop_fused",
+    "superstep_reference",
 ]

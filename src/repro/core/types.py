@@ -56,6 +56,13 @@ class ANNConfig:
     # Distance-backend selection (see core/backend.py): "auto" resolves to
     # the Pallas kernels on TPU and pure jnp elsewhere.
     backend: str = "auto"
+    # Fused multi-hop beam engine (core/search_batched.py): hops per
+    # super-step of the batched hop loop.  -1 = auto (fused with the
+    # default hop count when the resolved backend is pallas, off
+    # elsewhere); 0 = off (one while_loop cond per hop); H >= 1 = fused,
+    # H hops per outer-loop iteration.  Traversal is lane-exact against
+    # the unfused engine for every H.
+    hop_fused: int = -1
 
     def max_visits(self, l: int) -> int:
         return l + self.max_visit_slack
@@ -63,6 +70,7 @@ class ANNConfig:
     def __post_init__(self):
         assert self.metric in ("l2", "ip"), self.metric
         assert self.r >= 1 and self.n_cap >= 1 and self.dim >= 1
+        assert self.hop_fused >= -1, self.hop_fused
         if self.backend != "auto":
             # validate against the live registry so custom engines added via
             # register_backend are selectable (import deferred: backend.py

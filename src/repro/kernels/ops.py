@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .beam_hop import beam_hop_fused
 from .gather_distance import gather_distance, gather_distance_batched
 from .topk_score import topk_score
 from . import ref
@@ -40,6 +41,23 @@ def gather_distances_batched(ids, queries, vectors, norms=None, *,
         interpret = _default_interpret()
     return gather_distance_batched(
         ids, queries, vectors, norms, metric=metric, interpret=interpret
+    )
+
+
+def beam_hop(queries, beam_ids, beam_dists, beam_exp, seen, vis_ids,
+             vis_dists, n_vis, n_comps, n_hops, adj, vectors, norms,
+             nav_words, ret_words, *, metric="l2", h=4, interpret=None):
+    """Fused multi-hop beam super-step: advance every lane's traversal by
+    (up to) ``h`` masked hops in one kernel launch, beam + bitpacked seen
+    resident in VMEM throughout (the pallas engine's ``beam_superstep``).
+    Returns the updated ``(beam_ids, beam_dists, beam_exp, seen, vis_ids,
+    vis_dists, n_vis, n_comps, n_hops)`` carry."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return beam_hop_fused(
+        queries, beam_ids, beam_dists, beam_exp, seen, vis_ids, vis_dists,
+        n_vis, n_comps, n_hops, adj, vectors, norms, nav_words, ret_words,
+        metric=metric, h=h, interpret=interpret,
     )
 
 
@@ -97,6 +115,7 @@ def make_kernel_distance_fn(*, interpret=None):
 
 
 __all__ = [
+    "beam_hop",
     "gather_distances",
     "gather_distances_batched",
     "topk_search",

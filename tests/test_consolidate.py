@@ -73,3 +73,42 @@ def test_fresh_consolidate_restores_recall():
     assert not np.asarray(idx.state.tombstone).any()
     r = idx.recall(queries, k=10)
     assert r >= 0.9, r
+
+
+def test_device_sweep_cond_is_narrow_for_ip():
+    """The ip policy's ``device_sweep`` cond must carry ONLY the fields
+    Alg 6 touches: the (n_cap, dim) vector table (and norms) never ride
+    the branches as operands or results — and the narrowed path stays
+    semantically identical to ``light_consolidate``."""
+    import jax
+
+    from repro.core import device_sweep, get_policy
+    from repro.core.consolidate import LIGHT_CONSOLIDATE_FIELDS
+
+    idx, data, queries = _build()
+    idx.delete(np.arange(0, 30))
+    state = idx.state
+    pol = get_policy("ip")
+    assert pol.consolidation_fields == LIGHT_CONSOLIDATE_FIELDS
+
+    jaxpr = jax.make_jaxpr(
+        lambda g, t: device_sweep(g, CFG, pol, t)
+    )(state, jnp.bool_(True))
+    conds = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "cond"]
+    assert conds, "device_sweep lost its lax.cond"
+    big = (CFG.n_cap, CFG.dim)
+    for eqn in conds:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            shape = tuple(getattr(getattr(v, "aval", None), "shape", ()))
+            assert shape != big, (
+                "the (n_cap, dim) vector table rides the consolidation cond"
+            )
+
+    # trig=True == the full light sweep; trig=False is an exact no-op
+    swept = device_sweep(state, CFG, pol, jnp.bool_(True))
+    ref = light_consolidate(state, CFG)
+    for a, b in zip(jax.tree.leaves(swept), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    idle = device_sweep(state, CFG, pol, jnp.bool_(False))
+    for a, b in zip(jax.tree.leaves(idle), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

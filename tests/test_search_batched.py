@@ -163,6 +163,29 @@ def test_next_bucket_and_pad_batch():
     assert pad_batch(x[:4], 4) is x[:4] or pad_batch(x[:4], 4).shape == (4, 3)
 
 
+def test_pad_batch_fill_by_dtype():
+    """Padding must not invent valid payloads: integer lanes pad with
+    INVALID (a 0 fill is slot id 0, a real slot), bools with False,
+    floats with 0.0 — and an explicit ``fill`` always wins."""
+    from repro.core.types import INVALID
+
+    ids = jnp.array([[3, 4], [5, 6], [7, 8]], jnp.int32)
+    padded = pad_batch(ids, 3)
+    assert padded.shape == (4, 2)
+    assert np.all(np.asarray(padded[3:]) == INVALID)
+
+    valid = jnp.array([True, True, True])
+    pv = pad_batch(valid, 3)
+    assert pv.dtype == jnp.bool_
+    assert not np.asarray(pv[3:]).any()
+
+    qs = jnp.ones((3, 5), jnp.float32)
+    assert np.all(np.asarray(pad_batch(qs, 3)[3:]) == 0.0)
+
+    forced = pad_batch(ids, 3, fill=-7)
+    assert np.all(np.asarray(forced[3:]) == -7)
+
+
 def test_ragged_batches_share_one_compile():
     """B in {5, 6, 7} all ride the B=8 bucket: exactly one trace."""
     data, queries = make_dataset(120, 17, "l2", n_queries=8, seed=11)

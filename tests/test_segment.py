@@ -249,6 +249,51 @@ def test_segment_trace_count_bucketed():
     assert api_mod.TRACE_COUNTER["apply_segment"] - t2 == 1
 
 
+def test_auto_unroll_bucket_values():
+    """Pin the size-aware unroll policy: deeper unroll for narrow-lane
+    segments (per-op work underfills the machine, cross-op fusion pays),
+    stepping down to none past B=256."""
+    from repro.core import auto_unroll
+
+    assert auto_unroll(1, 8) == 1          # nothing to unroll
+    assert auto_unroll(3, 4) == 3          # capped by T
+    assert auto_unroll(8, 8) == 8
+    assert auto_unroll(16, 16) == 8
+    assert auto_unroll(16, 64) == 4
+    assert auto_unroll(16, 256) == 2
+    assert auto_unroll(16, 512) == 1
+
+
+def test_apply_segment_auto_unroll_recorded_and_equivalent():
+    """``apply_segment(unroll=None)`` resolves the (T, B)-bucketed default,
+    records it in ``TRACE_UNROLL`` at trace time, and — unroll being a pure
+    scheduling knob — produces the exact state/results of ``unroll=1``."""
+    from repro.core import auto_unroll
+
+    cfg = ANNConfig(dim=12, n_cap=164, r=8, l_build=16, l_search=16,
+                    l_delete=16, k_delete=10, n_copies=2)  # unique jit key
+    data, _ = make_dataset(80, cfg.dim, n_queries=2, seed=29)
+    base = _bootstrap(cfg, data, 50)
+
+    steps = [
+        insert_batch(np.arange(50 + 4 * t, 54 + 4 * t),
+                     data[50 + 4 * t : 54 + 4 * t])
+        for t in range(4)
+    ]
+    seg = plan_segments(steps, max_t=4).segments[0]
+    assert seg.ops.kind.shape == (4, 4)
+
+    api_mod.TRACE_UNROLL.pop((4, 4), None)
+    st_auto, res_auto = apply_segment(clone_state(base), cfg, seg.ops,
+                                      policy="ip", split=seg.split)
+    assert api_mod.TRACE_UNROLL[(4, 4)] == auto_unroll(4, 4) == 4
+
+    st_pin, res_pin = apply_segment(clone_state(base), cfg, seg.ops,
+                                    policy="ip", split=seg.split, unroll=1)
+    _tree_equal(st_auto, st_pin)
+    _tree_equal(res_auto, res_pin)
+
+
 def test_segmented_runbook_matches_per_op_replay():
     """``run_runbook(segmented=True)`` replays eval windows as compiled
     segments: eval steps, recall curve and final state all equal the
