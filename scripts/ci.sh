@@ -43,6 +43,13 @@ echo "== sharded streams: compact vs replicate routing (BENCH_update.json:shard)
 python -m benchmarks.shard_bench --smoke --out BENCH_update.json
 cat BENCH_update.json
 
+echo "== durability: save/restore + crash recovery (BENCH_recover.json) =="
+# --smoke enforces the determinism contract: a supervised run with an
+# injected crash (incl. a kill mid-checkpoint-write) recovers to a state
+# bit-identical to the uninterrupted run
+python -m benchmarks.recover_bench --smoke --out BENCH_recover.json
+cat BENCH_recover.json
+
 echo "== docs freshness (docs/API.md symbol index) =="
 python scripts/check_docs.py
 

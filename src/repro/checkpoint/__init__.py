@@ -1,1 +1,5 @@
-from .manager import CheckpointManager, restore_onto
+from .manager import (
+    CheckpointManager,
+    CheckpointMismatchError,
+    restore_onto,
+)

@@ -5,12 +5,22 @@ Design (1000-node posture, documented in DESIGN.md §5):
     path — *unsharded logical values*, so a checkpoint written under one mesh
     restores under any other (elastic rescale = device_put with the new
     shardings);
-  * writes go to ``step_XXXX.tmp/`` then ``fsync`` + atomic ``rename`` to
-    ``step_XXXX/``, and the ``MANIFEST.json`` inside is written last — a
-    checkpoint either exists completely or not at all;
+  * writes go to ``step_XXXX.tmp/``, every leaf file is fsynced, the
+    ``MANIFEST.json`` inside is written last (fsynced), then the directory
+    entries are fsynced and the tmp dir atomically ``rename``d to
+    ``step_XXXX/`` with a final fsync of the parent — a checkpoint either
+    exists completely or not at all, even across power loss right after the
+    rename (torn leaves cannot hide behind a durable manifest);
   * ``latest()`` scans for the newest complete manifest, so a crash mid-write
     falls back to the previous step (restart semantics exercised in
-    tests/test_ft.py).
+    tests/test_checkpoint_ft.py, including kills injected between leaf
+    writes, before the rename and right after it via ``save``'s
+    ``on_event`` hook);
+  * ``load`` trusts nothing: every leaf is validated against the manifest's
+    recorded shape/dtype and, when a ``like`` template is supplied, against
+    the template's structure — mismatches raise the typed
+    ``CheckpointMismatchError`` (never a bare ``assert``, which vanishes
+    under ``python -O``).
 
 On a real multi-host fleet each host writes only its addressable shards and
 the manifest carries the global shape/sharding metadata; the single-process
@@ -22,10 +32,18 @@ import json
 import os
 import shutil
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointMismatchError(ValueError):
+    """A checkpoint failed validation against its manifest or the caller's
+    template: torn leaf files, missing/surplus pytree keys, or (at the
+    ``core/persist.py`` layer) schema/config/capacity drift.  Typed so
+    restore paths can catch it — and so the checks survive ``python -O``,
+    which strips ``assert`` statements entirely."""
 
 
 def _flatten(tree):
@@ -39,6 +57,22 @@ def _flatten(tree):
     return out, treedef
 
 
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -47,7 +81,15 @@ class CheckpointManager:
 
     # -- write ----------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> Path:
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             *, on_event: Optional[Callable[[str], None]] = None) -> Path:
+        """Write one atomic checkpoint.  ``on_event`` is a failure-injection
+        hook for crash tests: called with ``"leaf:<i>"`` after each leaf
+        file lands, ``"manifest"`` after the manifest is written (but before
+        the commit rename) and ``"rename"`` right after the rename — a hook
+        that raises simulates a kill at exactly that point of the commit
+        protocol."""
+        ev = on_event or (lambda _e: None)
         leaves, treedef = _flatten(tree)
         tmp = self.dir / f"step_{step:08d}.tmp"
         final = self.dir / f"step_{step:08d}"
@@ -59,6 +101,11 @@ class CheckpointManager:
             arr = np.asarray(jax.device_get(leaf))
             fname = f"leaf_{i:05d}.npy"
             np.save(tmp / fname, arr)
+            # durability gap fix: without the per-leaf fsync a power loss
+            # AFTER the (durable) rename could still surface torn leaf
+            # files behind a complete-looking manifest
+            _fsync_file(tmp / fname)
+            ev(f"leaf:{i}")
             index[key] = {
                 "file": fname,
                 "shape": list(arr.shape),
@@ -76,9 +123,13 @@ class CheckpointManager:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        _fsync_dir(tmp)          # directory entries of the leaves + manifest
+        ev("manifest")
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(self.dir)     # the rename itself
+        ev("rename")
         self._gc()
         return final
 
@@ -105,26 +156,70 @@ class CheckpointManager:
         steps = self._complete_steps()
         return max(steps) if steps else None
 
+    def manifest(self, step: Optional[int] = None) -> dict:
+        """The manifest dict of ``step`` (default: latest complete step) —
+        metadata only, no leaf reads.  Restore paths use this to size their
+        template pytree before paying for the leaf payloads."""
+        if step is None:
+            step = self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        return json.loads((d / "MANIFEST.json").read_text())
+
     def load(self, step: Optional[int] = None,
              like: Any = None) -> Tuple[int, Any, dict]:
         """Returns (step, tree-of-numpy, extra).  ``like`` supplies the pytree
-        structure; without it a flat {path: array} dict is returned."""
+        structure; without it a flat {path: array} dict is returned.
+
+        Every leaf file is verified against the manifest's recorded
+        shape/dtype (a torn ``.npy`` behind a complete manifest is a
+        ``CheckpointMismatchError``, not silently-wrong tensors), and with
+        ``like`` the checkpoint's key set and per-leaf shapes/dtypes must
+        match the template's."""
         if step is None:
             step = self.latest()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self.dir / f"step_{step:08d}"
         manifest = json.loads((d / "MANIFEST.json").read_text())
-        flat = {
-            key: np.load(d / meta["file"])
-            for key, meta in manifest["leaves"].items()
-        }
+        flat = {}
+        for key, meta in manifest["leaves"].items():
+            try:
+                arr = np.load(d / meta["file"])
+            except Exception as e:
+                raise CheckpointMismatchError(
+                    f"step {step}: unreadable leaf {key!r} "
+                    f"({meta['file']}): {e}"
+                ) from e
+            if (list(arr.shape) != list(meta["shape"])
+                    or str(arr.dtype) != meta["dtype"]):
+                raise CheckpointMismatchError(
+                    f"step {step}: torn leaf {key!r}: file holds "
+                    f"{tuple(arr.shape)}/{arr.dtype}, manifest recorded "
+                    f"{tuple(meta['shape'])}/{meta['dtype']}"
+                )
+            flat[key] = arr
         if like is None:
             return step, flat, manifest["extra"]
         like_flat, treedef = _flatten(like)
-        assert set(like_flat) == set(flat), (
-            f"checkpoint/model mismatch: {set(like_flat) ^ set(flat)}"
-        )
+        if set(like_flat) != set(flat):
+            missing = sorted(set(like_flat) - set(flat))
+            surplus = sorted(set(flat) - set(like_flat))
+            raise CheckpointMismatchError(
+                f"step {step}: checkpoint/template structure mismatch: "
+                f"missing from checkpoint {missing}, "
+                f"not in template {surplus}"
+            )
+        for key, tmpl in like_flat.items():
+            t_shape = tuple(np.shape(tmpl))
+            t_dtype = np.asarray(tmpl).dtype
+            if flat[key].shape != t_shape or flat[key].dtype != t_dtype:
+                raise CheckpointMismatchError(
+                    f"step {step}: leaf {key!r} is "
+                    f"{flat[key].shape}/{flat[key].dtype} in the checkpoint "
+                    f"but {t_shape}/{t_dtype} in the template"
+                )
         leaves = [flat[k] for k in like_flat]
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         return step, tree, manifest["extra"]

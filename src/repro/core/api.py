@@ -837,6 +837,35 @@ def plan_segments(
     return SegmentPlan(segments=tuple(segments))
 
 
+def segment_step(
+    state: IndexState,
+    cfg: ANNConfig,
+    seg: Segment,
+    *,
+    policy: str = "ip",
+    sequential: bool = False,
+    unroll: Optional[int] = None,
+):
+    """Apply ONE planned ``Segment`` — the compiled ``apply_segment``
+    dispatch plus the host-policy consolidation boundary (fresh: run the
+    policy's host pass whenever any op of the segment raised its
+    ``needs_consolidation`` flag).  This is the unit of determinism the
+    durability layer builds on: ``run_segments`` is a plain loop of it, and
+    ``core/persist.py``'s supervised runner replays exactly this function
+    after a restore, so recovered streams cannot diverge from uninterrupted
+    ones.  ``state`` is donated (via ``apply_segment``)."""
+    pol = get_policy(policy)
+    state, res = apply_segment(
+        state, cfg, seg.ops, policy=policy, sequential=sequential,
+        split=seg.split, unroll=unroll,
+    )
+    if not pol.device_consolidation and bool(
+        np.asarray(res.needs_consolidation).any()
+    ):
+        state = state._replace(graph=pol.consolidate(state.graph, cfg))
+    return state, res
+
+
 def run_segments(
     state: IndexState,
     cfg: ANNConfig,
@@ -845,25 +874,23 @@ def run_segments(
     policy: str = "ip",
     sequential: bool = False,
     unroll: Optional[int] = None,
+    start: int = 0,
 ):
     """Execute a ``SegmentPlan``, threading the carry state across segments.
 
     Device policies (ip) never touch the host inside the loop; for host
     policies (fresh) each segment's ``needs_consolidation`` flags are
     checked at the segment boundary and the policy's host pass runs there.
-    Returns ``(state, [SegmentResult, ...])`` (one result per segment; the
-    caller slices ``[:n_ops]`` rows via the plan)."""
-    pol = get_policy(policy)
+    ``start`` skips the first segments (restore paths replay a plan tail
+    from a checkpointed state).  Returns ``(state, [SegmentResult, ...])``
+    (one result per executed segment; the caller slices ``[:n_ops]`` rows
+    via the plan)."""
     results = []
-    for seg in plan.segments:
-        state, res = apply_segment(
-            state, cfg, seg.ops, policy=policy, sequential=sequential,
-            split=seg.split, unroll=unroll,
+    for seg in plan.segments[start:]:
+        state, res = segment_step(
+            state, cfg, seg, policy=policy, sequential=sequential,
+            unroll=unroll,
         )
-        if not pol.device_consolidation and bool(
-            np.asarray(res.needs_consolidation).any()
-        ):
-            state = state._replace(graph=pol.consolidate(state.graph, cfg))
         results.append(res)
     return state, results
 
@@ -947,4 +974,5 @@ __all__ = [
     "run_segments",
     "search",
     "segment_scan",
+    "segment_step",
 ]

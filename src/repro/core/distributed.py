@@ -47,6 +47,23 @@ Straggler mitigation for serving: replicate-mode ``search`` queries all
 shards anyway (fan-out IS the redundancy); at 1000-node scale the merge
 tolerates missing shards by masking their results (see ft/supervisor).
 
+**Logical shards & elastic reshard-on-restore.**  The unit of data
+ownership is a LOGICAL shard: routing hashes external ids into
+``n_logical`` = L buckets (fixed at creation and persisted in the
+checkpoint manifest), and the stacked state's leading axis is L, laid out
+over the S physical mesh devices (L % S == 0, G = L/S rows per device).
+Every SPMD program runs its per-row body in a Python loop over the G local
+rows — NOT vmap, so each row executes exactly the single-shard compiled
+program (beam while-loops and pallas kernels unchanged, results bit-exact
+regardless of S).  Because per-logical-row programs are independent of the
+physical layout, a checkpoint written under one mesh restores under ANY
+mesh whose size divides L with bit-identical search answers and update
+behaviour — ``save``/``restore`` below thread this through
+``core/persist.py``.  G == 1 (the default L = S) reproduces the
+pre-logical-shard programs exactly.  This also answers the uneven-mesh
+question: meshes whose sizes share L (e.g. L=12 over S in {1,2,3,4,6,12})
+interoperate through checkpoints without re-hashing a single point.
+
 Distance math inside every per-shard beam rides the kernel engine selected
 by ``cfg.backend`` (the unified front doors resolve it from the static
 config under ``shard_map``); lane payloads are int32 end-to-end (external
@@ -75,8 +92,10 @@ from .api import (
     plan_segments,
     segment_scan,
 )
+from ..checkpoint.manager import CheckpointMismatchError
 from .backend import BIG
 from .consolidate import consolidate_stacked
+from .persist import restore_index, save_index
 from .search_batched import batched_greedy_search, merge_topk, next_bucket
 from .types import INVALID, ANNConfig, IndexState, clip_ids, init_index_state
 
@@ -94,6 +113,16 @@ TRACE_COUNTER = {
     "search_partition": 0,
 }
 TRACE_SHAPES: dict = {k: [] for k in TRACE_COUNTER}
+
+
+def _row(tree, g: int):
+    """Logical row ``g`` of a device-local (G, ...) stacked block."""
+    return jax.tree.map(lambda x: x[g], tree)
+
+
+def _restack(rows):
+    """Stack per-row pytrees back into the device-local (G, ...) block."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
 
 def as_int_payload(ids) -> jax.Array:
@@ -117,11 +146,18 @@ class ShardedIndex:
     each shard only its owned lanes, ``"replicate"`` ships every shard the
     whole batch with non-owned lanes masked (the pre-rework layout, kept
     for parity checks and benchmarking the difference).
+
+    ``n_logical`` fixes the routing-hash modulus L independently of the
+    mesh size S (default L = S).  L must be a multiple of S; each device
+    owns G = L/S logical rows.  Checkpoints record L, so ``restore`` can
+    lay the same L rows over a different mesh (elastic reshard) without
+    moving any point between shards.
     """
 
     def __init__(self, cfg: ANNConfig, mesh: Mesh, axis: str = "shard",
                  policy: str = "ip", max_external_id: Optional[int] = None,
-                 routing: str = "compact", sequential: bool = True):
+                 routing: str = "compact", sequential: bool = True,
+                 n_logical: Optional[int] = None):
         if routing not in ("compact", "replicate"):
             raise ValueError(f"unknown routing {routing!r}")
         self.cfg = cfg
@@ -136,13 +172,22 @@ class ShardedIndex:
         # (masked lanes of a replicated batch still pay tile width there).
         self.sequential = sequential
         self.n_shards = mesh.shape[axis]
+        self.n_logical = int(n_logical) if n_logical else self.n_shards
+        if self.n_logical % self.n_shards:
+            raise ValueError(
+                f"n_logical={self.n_logical} must be a multiple of the "
+                f"mesh size {self.n_shards} (each device holds "
+                f"G = n_logical/n_shards whole logical rows)"
+            )
+        self.rows_per_shard = self.n_logical // self.n_shards
         if max_external_id is None:
             max_external_id = cfg.n_cap * 4
         self.max_external_id = max_external_id
-        # stacked per-shard handles, sharded on the leading axis
+        # stacked per-LOGICAL-shard handles, the leading L axis laid out
+        # over the S mesh devices (G whole rows per device)
         self.states: IndexState = jax.device_put(
             jax.vmap(lambda _: init_index_state(cfg, max_external_id))(
-                jnp.arange(self.n_shards)
+                jnp.arange(self.n_logical)
             ),
             NamedSharding(mesh, P(axis)),
         )
@@ -157,7 +202,7 @@ class ShardedIndex:
     # -- SPMD programs -------------------------------------------------------
 
     def _build_search(self):
-        cfg, axis = self.cfg, self.axis
+        cfg, axis, G = self.cfg, self.axis, self.rows_per_shard
 
         @functools.partial(jax.jit, static_argnames=("k", "l"))
         def search(states, queries, *, k: int, l: int):
@@ -165,33 +210,47 @@ class ShardedIndex:
             TRACE_SHAPES["search_replicate"].append(tuple(queries.shape))
 
             def shard_fn(state, q):
-                state = jax.tree.map(lambda x: x[0], state)  # unstack local
-
-                res = batched_greedy_search(state.graph, cfg, q, k=k, l=l)
-                ids, dists, comps = (
-                    res.topk_ids, res.topk_dists, res.n_comps
-                )                                            # (Q, k) local
-                # device-resident id map: local slots -> external ids
-                ext = jnp.where(
-                    ids >= 0,
-                    state.slot2ext[clip_ids(ids, cfg.n_cap)],
-                    INVALID,
-                )
-                # global merge: gather every shard's top-k and re-select
-                all_ids = lax.all_gather(ext, axis)          # (S, Q, k)
-                all_d = lax.all_gather(dists, axis)
-                shard_of = lax.broadcasted_iota(
-                    jnp.int32, all_ids.shape, 0
-                )
+                me = lax.axis_index(axis)
+                # one beam per local logical row (Python loop, NOT vmap:
+                # each row runs exactly the single-shard program, so
+                # answers are bit-identical under any G = L/S layout)
+                exts, dists, heres = [], [], []
+                comps = jnp.zeros((), jnp.int32)
+                for g in range(G):
+                    row = _row(state, g)
+                    res = batched_greedy_search(row.graph, cfg, q, k=k, l=l)
+                    ids = res.topk_ids                       # (Q, k) local
+                    # device-resident id map: local slots -> external ids
+                    exts.append(jnp.where(
+                        ids >= 0,
+                        row.slot2ext[clip_ids(ids, cfg.n_cap)],
+                        INVALID,
+                    ))
+                    dists.append(res.topk_dists)
+                    heres.append(jnp.broadcast_to(
+                        me * G + g, ids.shape
+                    ).astype(jnp.int32))                     # logical id
+                    comps = comps + jnp.sum(res.n_comps).astype(jnp.int32)
+                # concat local rows k-major: after the gather the flat
+                # candidate order is (logical shard, k) exactly as in the
+                # G == 1 layout, so lax.top_k tie-breaking is identical
+                # for every S that divides L
+                ext = jnp.concatenate(exts, axis=1)          # (Q, G*k)
+                d = jnp.concatenate(dists, axis=1)
+                here = jnp.concatenate(heres, axis=1)
+                # global merge: gather every device's candidates, re-select
+                all_ids = lax.all_gather(ext, axis)          # (S, Q, G*k)
+                all_d = lax.all_gather(d, axis)
+                all_s = lax.all_gather(here, axis)
                 flat_d = all_d.transpose(1, 0, 2).reshape(q.shape[0], -1)
                 flat_i = all_ids.transpose(1, 0, 2).reshape(q.shape[0], -1)
-                flat_s = shard_of.transpose(1, 0, 2).reshape(q.shape[0], -1)
+                flat_s = all_s.transpose(1, 0, 2).reshape(q.shape[0], -1)
                 top_d, idx = lax.top_k(-flat_d, k)
                 gids = jnp.take_along_axis(flat_i, idx, axis=1)
                 gshard = jnp.take_along_axis(flat_s, idx, axis=1)
                 return (
                     gids[None], gshard[None], (-top_d)[None],
-                    jnp.sum(comps)[None],
+                    comps[None],
                 )
 
             return shard_map(
@@ -205,6 +264,7 @@ class ShardedIndex:
 
     def _build_search_partitioned(self):
         cfg, axis, n_shards = self.cfg, self.axis, self.n_shards
+        G = self.rows_per_shard
 
         @functools.partial(jax.jit, static_argnames=("k", "l"))
         def search_p(states, queries, valid, *, k: int, l: int):
@@ -221,7 +281,6 @@ class ShardedIndex:
             TRACE_SHAPES["search_partition"].append(tuple(queries.shape))
 
             def shard_fn(state, q, v):
-                state = jax.tree.map(lambda x: x[0], state)
                 me = lax.axis_index(axis)
                 perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
                 qs = q.shape[0]
@@ -230,23 +289,30 @@ class ShardedIndex:
                 best_s = jnp.full((qs, k), INVALID, jnp.int32)
                 comps = jnp.zeros((), jnp.int32)
                 for _ in range(n_shards):
-                    res = batched_greedy_search(
-                        state.graph, cfg, q, k=k, l=l, valid=v
-                    )
-                    ids = res.topk_ids
-                    ext = jnp.where(
-                        ids >= 0,
-                        state.slot2ext[clip_ids(ids, cfg.n_cap)],
-                        INVALID,
-                    )
-                    here = jnp.where(
-                        ids >= 0, jnp.broadcast_to(me, ids.shape), INVALID
-                    ).astype(jnp.int32)
-                    d = jnp.where(ids >= 0, res.topk_dists, BIG)
-                    best_d, (best_i, best_s) = merge_topk(
-                        best_d, d, k, (best_i, ext), (best_s, here)
-                    )
-                    comps = comps + jnp.sum(res.n_comps).astype(jnp.int32)
+                    # beam over every LOCAL logical row before rotating —
+                    # after S hops a sub-batch has merged all L rows
+                    for g in range(G):
+                        row = _row(state, g)
+                        res = batched_greedy_search(
+                            row.graph, cfg, q, k=k, l=l, valid=v
+                        )
+                        ids = res.topk_ids
+                        ext = jnp.where(
+                            ids >= 0,
+                            row.slot2ext[clip_ids(ids, cfg.n_cap)],
+                            INVALID,
+                        )
+                        here = jnp.where(
+                            ids >= 0,
+                            jnp.broadcast_to(me * G + g, ids.shape),
+                            INVALID,
+                        ).astype(jnp.int32)
+                        d = jnp.where(ids >= 0, res.topk_dists, BIG)
+                        best_d, (best_i, best_s) = merge_topk(
+                            best_d, d, k, (best_i, ext), (best_s, here)
+                        )
+                        comps = (comps
+                                 + jnp.sum(res.n_comps).astype(jnp.int32))
                     # rotate the sub-batch (and its running merge) onward
                     q, v, best_d, best_i, best_s, comps = [
                         lax.ppermute(x, axis, perm)
@@ -266,39 +332,43 @@ class ShardedIndex:
 
     def _build_update(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
-        sequential = self.sequential
+        sequential, G = self.sequential, self.rows_per_shard
 
         @functools.partial(jax.jit, donate_argnums=0)
         def update(states, batch, owners):
             """Replicate-and-mask layout: ``batch`` is a replicated
-            ``UpdateBatch``; ``owners`` i32[B] is the owning shard of each
-            lane.  Every shard runs the same unified ``apply`` over all B
-            lanes with non-owned lanes masked invalid."""
+            ``UpdateBatch``; ``owners`` i32[B] is the owning LOGICAL shard
+            of each lane.  Every logical row runs the same unified
+            ``apply`` over all B lanes with non-owned lanes masked
+            invalid."""
             TRACE_COUNTER["update_replicate"] += 1
             TRACE_SHAPES["update_replicate"].append(tuple(batch.kind.shape))
 
             def shard_fn(state, batch, owners):
-                state = jax.tree.map(lambda x: x[0], state)
                 me = lax.axis_index(axis)
-                mine = batch._replace(valid=batch.valid & (owners == me))
-                # per-shard update semantics (sequential: the paper's
-                # serial concurrency model; else relaxed-visibility)
-                state, res = apply(
-                    state, cfg, mine, policy=policy, sequential=sequential
-                )
-                # device-side consolidation trigger per op, exactly as the
-                # segment path and StreamingIndex: each shard sweeps when
-                # ITS pending/active counters cross the threshold
-                pol = get_policy(policy)
-                if pol.device_consolidation:
-                    trig = pol.should_consolidate_device(cfg, state.graph)
-                    state = state._replace(
-                        graph=device_sweep(state.graph, cfg, pol, trig)
+                rows, ress = [], []
+                for g in range(G):
+                    row = _row(state, g)
+                    mine = batch._replace(
+                        valid=batch.valid & (owners == me * G + g)
                     )
-                return (
-                    jax.tree.map(lambda x: x[None], state),
-                    jax.tree.map(lambda x: x[None], res),
-                )
+                    # per-shard update semantics (sequential: the paper's
+                    # serial concurrency model; else relaxed-visibility)
+                    row, res = apply(
+                        row, cfg, mine, policy=policy, sequential=sequential
+                    )
+                    # device-side consolidation trigger per op, exactly as
+                    # the segment path and StreamingIndex: each logical row
+                    # sweeps when ITS counters cross the threshold
+                    pol = get_policy(policy)
+                    if pol.device_consolidation:
+                        trig = pol.should_consolidate_device(cfg, row.graph)
+                        row = row._replace(
+                            graph=device_sweep(row.graph, cfg, pol, trig)
+                        )
+                    rows.append(row)
+                    ress.append(res)
+                return _restack(rows), _restack(ress)
 
             return shard_map(
                 shard_fn, mesh=self.mesh,
@@ -311,34 +381,35 @@ class ShardedIndex:
 
     def _build_update_compact(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
-        sequential = self.sequential
+        sequential, G = self.sequential, self.rows_per_shard
 
         @functools.partial(jax.jit, donate_argnums=0)
         def update(states, batch):
-            """Owner-compacted layout: ``batch`` is an (S, Bc)
-            ``UpdateBatch`` sharded on the leading axis — row ``s`` holds
-            exactly shard ``s``'s owned lanes (original relative order,
-            bucket-padded).  No owner masking: each shard's ``apply`` scan
-            is Bc ~= B/S lanes wide instead of B."""
+            """Owner-compacted layout: ``batch`` is an (L, Bc)
+            ``UpdateBatch`` sharded on the leading axis — row ``l`` holds
+            exactly logical shard ``l``'s owned lanes (original relative
+            order, bucket-padded).  No owner masking: each row's ``apply``
+            scan is Bc ~= B/L lanes wide instead of B."""
             TRACE_COUNTER["update_compact"] += 1
             TRACE_SHAPES["update_compact"].append(tuple(batch.kind.shape))
 
             def shard_fn(state, batch):
-                state = jax.tree.map(lambda x: x[0], state)
-                mine = jax.tree.map(lambda x: x[0], batch)
-                state, res = apply(
-                    state, cfg, mine, policy=policy, sequential=sequential
-                )
-                pol = get_policy(policy)
-                if pol.device_consolidation:
-                    trig = pol.should_consolidate_device(cfg, state.graph)
-                    state = state._replace(
-                        graph=device_sweep(state.graph, cfg, pol, trig)
+                rows, ress = [], []
+                for g in range(G):
+                    row = _row(state, g)
+                    mine = _row(batch, g)
+                    row, res = apply(
+                        row, cfg, mine, policy=policy, sequential=sequential
                     )
-                return (
-                    jax.tree.map(lambda x: x[None], state),
-                    jax.tree.map(lambda x: x[None], res),
-                )
+                    pol = get_policy(policy)
+                    if pol.device_consolidation:
+                        trig = pol.should_consolidate_device(cfg, row.graph)
+                        row = row._replace(
+                            graph=device_sweep(row.graph, cfg, pol, trig)
+                        )
+                    rows.append(row)
+                    ress.append(res)
+                return _restack(rows), _restack(ress)
 
             return shard_map(
                 shard_fn, mesh=self.mesh,
@@ -351,33 +422,36 @@ class ShardedIndex:
 
     def _build_update_segment(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
-        sequential = self.sequential
+        sequential, G = self.sequential, self.rows_per_shard
 
         @functools.partial(jax.jit, donate_argnums=0)
         def update_segment(states, ops, owners):
             """Replicate-and-mask segment: ``ops`` is a replicated (T, B)
-            op tensor; ``owners`` i32[T, B].  Every shard runs the same
-            compiled ``lax.scan`` of the ``apply`` body
-            (core/api.py::segment_scan) with non-owned lanes masked
-            invalid — T ops, ONE dispatch, per-shard serial semantics,
-            device-side consolidation trigger per op (the ip policy's
-            light sweep fires mid-segment on whichever shard's counters
-            cross the threshold)."""
+            op tensor; ``owners`` i32[T, B] of LOGICAL shard ids.  Every
+            logical row runs the same compiled ``lax.scan`` of the
+            ``apply`` body (core/api.py::segment_scan) with non-owned
+            lanes masked invalid — T ops, ONE dispatch, per-shard serial
+            semantics, device-side consolidation trigger per op (the ip
+            policy's light sweep fires mid-segment on whichever row's
+            counters cross the threshold)."""
             TRACE_COUNTER["segment_replicate"] += 1
             TRACE_SHAPES["segment_replicate"].append(tuple(ops.kind.shape))
 
             def shard_fn(state, ops, owners):
-                state = jax.tree.map(lambda x: x[0], state)
                 me = lax.axis_index(axis)
-                mine = ops._replace(valid=ops.valid & (owners == me))
-                state, res = segment_scan(
-                    state, cfg, mine, get_policy(policy),
-                    sequential=sequential, split=None,
-                )
-                return (
-                    jax.tree.map(lambda x: x[None], state),
-                    jax.tree.map(lambda x: x[None], res),
-                )
+                rows, ress = [], []
+                for g in range(G):
+                    row = _row(state, g)
+                    mine = ops._replace(
+                        valid=ops.valid & (owners == me * G + g)
+                    )
+                    row, res = segment_scan(
+                        row, cfg, mine, get_policy(policy),
+                        sequential=sequential, split=None,
+                    )
+                    rows.append(row)
+                    ress.append(res)
+                return _restack(rows), _restack(ress)
 
             return shard_map(
                 shard_fn, mesh=self.mesh,
@@ -390,28 +464,29 @@ class ShardedIndex:
 
     def _build_update_segment_compact(self):
         cfg, axis, policy = self.cfg, self.axis, self.policy
-        sequential = self.sequential
+        sequential, G = self.sequential, self.rows_per_shard
 
         @functools.partial(jax.jit, donate_argnums=0)
         def update_segment(states, ops):
-            """Owner-compacted segment: ``ops`` is an (S, T, Bc) op tensor
+            """Owner-compacted segment: ``ops`` is an (L, T, Bc) op tensor
             sharded on the leading axis (``compact_owner_segment``) — the
             same compiled ``lax.scan`` of the ``apply`` body, but each
-            shard scans T ops of Bc ~= B/S lanes instead of B."""
+            logical row scans T ops of Bc ~= B/L lanes instead of B."""
             TRACE_COUNTER["segment_compact"] += 1
             TRACE_SHAPES["segment_compact"].append(tuple(ops.kind.shape))
 
             def shard_fn(state, ops):
-                state = jax.tree.map(lambda x: x[0], state)
-                mine = jax.tree.map(lambda x: x[0], ops)
-                state, res = segment_scan(
-                    state, cfg, mine, get_policy(policy),
-                    sequential=sequential, split=None,
-                )
-                return (
-                    jax.tree.map(lambda x: x[None], state),
-                    jax.tree.map(lambda x: x[None], res),
-                )
+                rows, ress = [], []
+                for g in range(G):
+                    row = _row(state, g)
+                    mine = _row(ops, g)
+                    row, res = segment_scan(
+                        row, cfg, mine, get_policy(policy),
+                        sequential=sequential, split=None,
+                    )
+                    rows.append(row)
+                    ress.append(res)
+                return _restack(rows), _restack(ress)
 
             return shard_map(
                 shard_fn, mesh=self.mesh,
@@ -425,9 +500,13 @@ class ShardedIndex:
     # -- host API -------------------------------------------------------------
 
     def route(self, ext_ids: np.ndarray) -> np.ndarray:
-        """Owner shard of each external id (stable hash routing)."""
+        """Owner LOGICAL shard of each external id (stable hash routing).
+        The modulus is ``n_logical``, fixed at creation and persisted in
+        checkpoints — resharding onto a different mesh never re-routes a
+        point."""
+        n = getattr(self, "n_logical", None) or self.n_shards
         return (np.asarray(ext_ids, np.int64) * 2654435761 % 2**31
-                % self.n_shards).astype(np.int32)
+                % n).astype(np.int32)
 
     def _apply_update(self, batch, owners):
         """Route one bucket-padded ``UpdateBatch`` through the selected
@@ -436,7 +515,7 @@ class ShardedIndex:
         ``(ok, slot)`` numpy arrays, independent of the routing layout."""
         if self.routing == "compact":
             cbatch, pos, _ = compact_owner_batch(
-                batch, owners, self.n_shards
+                batch, owners, self.n_logical
             )
             cbatch = jax.device_put(cbatch, self._shard_spec)
             self.states, res = self._update_compact(self.states, cbatch)
@@ -559,7 +638,7 @@ class ShardedIndex:
             ).astype(np.int32)                          # (T, B)
             if self.routing == "compact":
                 cops, pos, _ = compact_owner_segment(
-                    seg.ops, owners, self.n_shards
+                    seg.ops, owners, self.n_logical
                 )
                 cops = jax.device_put(cops, self._shard_spec)
                 self.states, res = self._update_segment_compact(
@@ -626,10 +705,75 @@ class ShardedIndex:
             )
         return shard_ids
 
+    # -- durability -----------------------------------------------------------
+
+    def save(self, manager, step: int, *, extra: Optional[dict] = None,
+             on_event=None):
+        """Checkpoint the stacked per-logical-shard state through
+        ``core/persist.py::save_index``.  The manifest records
+        ``n_logical`` (the stacked leading axis), so ``restore`` can lay
+        the same L rows over a different mesh.  Serving knobs (routing /
+        sequential) ride the user extra as defaults for the restored
+        instance.  Must be called BEFORE the next update invalidates the
+        donated ``states`` handle."""
+        user = {"routing": self.routing, "sequential": self.sequential}
+        user.update(extra or {})
+        return save_index(
+            manager, step, self.states, self.cfg,
+            policy=self.policy, extra=user, on_event=on_event,
+        )
+
+    @classmethod
+    def restore(cls, manager, cfg: ANNConfig, mesh: Mesh, *,
+                step: Optional[int] = None, axis: str = "shard",
+                policy: Optional[str] = None,
+                routing: Optional[str] = None,
+                sequential: Optional[bool] = None):
+        """Restore a ``ShardedIndex`` checkpoint onto ``mesh`` — which may
+        have a DIFFERENT size than the mesh that wrote it (elastic
+        reshard), as long as it divides the checkpoint's ``n_logical``.
+        Because routing and every per-row program are functions of the
+        logical shard only, the restored index answers searches and
+        absorbs updates bit-identically to the original layout.
+
+        Returns ``(index, step)``.  ``policy``/``routing``/``sequential``
+        default to what the checkpoint recorded; passing ``policy``
+        explicitly validates it against the checkpoint (typed
+        ``CheckpointMismatchError`` on disagreement)."""
+        step, state, extra = restore_index(
+            manager, cfg, step=step, policy=policy, device=False
+        )
+        meta = extra["index"]
+        n_logical = meta["n_logical"]
+        if not n_logical:
+            raise CheckpointMismatchError(
+                "checkpoint holds a single IndexState, not a sharded "
+                "stack (restore it with core.persist.restore_index)"
+            )
+        n_shards = mesh.shape[axis]
+        if n_logical % n_shards:
+            raise CheckpointMismatchError(
+                f"cannot reshard: checkpoint has {n_logical} logical "
+                f"shards, not divisible by the restore mesh size "
+                f"{n_shards}"
+            )
+        user = extra.get("user", {})
+        idx = cls(
+            cfg, mesh, axis=axis, policy=meta["policy"],
+            max_external_id=meta["max_external_id"],
+            routing=routing if routing is not None
+            else user.get("routing", "compact"),
+            sequential=sequential if sequential is not None
+            else user.get("sequential", True),
+            n_logical=n_logical,
+        )
+        idx.states = jax.device_put(state, idx._shard_spec)
+        return idx, step
+
     def search(self, queries, k=10, l=64, *, partition: Optional[str] = None):
-        """Returns (ext_ids (Q, k), owner shards (Q, k), dists (Q, k),
-        total comps) — ids are EXTERNAL ids off the device-resident
-        ``slot2ext`` maps.
+        """Returns (ext_ids (Q, k), owner LOGICAL shards (Q, k), dists
+        (Q, k), total comps) — ids are EXTERNAL ids off the
+        device-resident ``slot2ext`` maps.
 
         ``partition=None``/``"replicate"`` (default) fans the whole query
         batch out to every shard and merges the all-gathered candidates —

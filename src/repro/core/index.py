@@ -283,6 +283,64 @@ class StreamingIndex:
             self.counters.n_consolidations += 1
         return did
 
+    # -- durability --------------------------------------------------------
+
+    def save(self, manager, step: int, *, extra: Optional[dict] = None,
+             on_event=None):
+        """Checkpoint the device-resident handle plus the host-side
+        accounting (``counters``/``eval_counters`` ride the manifest
+        ``extra`` — they are host floats/ints, not pytree leaves).  Call
+        between updates, BEFORE the next donated ``apply`` invalidates
+        the handle."""
+        from .persist import save_index
+
+        user = {
+            "mode": self.mode,
+            "batch_updates": self.batch_updates,
+            "counters": dataclasses.asdict(self.counters),
+            "eval_counters": dataclasses.asdict(self.eval_counters),
+        }
+        user.update(extra or {})
+        return save_index(
+            manager, step, self.istate, self.cfg,
+            policy=self.mode, extra=user, on_event=on_event,
+        )
+
+    @classmethod
+    def restore(cls, manager, cfg: ANNConfig, *, step=None, mode=None,
+                batch_updates: Optional[bool] = None,
+                backend: Optional[str] = None):
+        """Restore a ``StreamingIndex`` from the latest (or given) step
+        written by ``save``.  Returns ``(index, step)``; the serving and
+        eval counters resume from the checkpointed values.  ``mode``
+        defaults to the checkpoint's policy; passing it explicitly
+        validates against the checkpoint (``CheckpointMismatchError`` on
+        disagreement)."""
+        from .persist import CheckpointMismatchError, restore_index
+
+        step, istate, extra = restore_index(
+            manager, cfg, step=step, policy=mode
+        )
+        meta, user = extra["index"], extra.get("user", {})
+        if meta["n_logical"]:
+            raise CheckpointMismatchError(
+                f"checkpoint holds a {meta['n_logical']}-shard stacked "
+                f"state — restore it with ShardedIndex.restore"
+            )
+        idx = cls(
+            cfg, mode=meta["policy"],
+            max_external_id=meta["max_external_id"],
+            batch_updates=(
+                user.get("batch_updates", False)
+                if batch_updates is None else batch_updates
+            ),
+            backend=backend,
+        )
+        idx.istate = istate
+        idx.counters = OpCounters(**user.get("counters", {}))
+        idx.eval_counters = EvalCounters(**user.get("eval_counters", {}))
+        return idx, step
+
     # -- queries -----------------------------------------------------------
 
     def _search(self, queries, k, l, counters):

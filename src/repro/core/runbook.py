@@ -213,3 +213,16 @@ def runbook_update_stream(rb: Runbook, steps: Optional[List[RunbookStep]]
         batches.append(batch)
         splits.append(split)
     return batches, splits
+
+
+def runbook_segment_plan(rb: Runbook,
+                         steps: Optional[List[RunbookStep]] = None,
+                         *, max_t: int = 64):
+    """A runbook (slice) straight to a ``SegmentPlan`` — the replayable
+    unit the durability layer supervises: the plan is pure host data, so
+    ``core.persist.run_segments_supervised`` can checkpoint mid-plan and
+    deterministically replay the tail after a crash."""
+    from .api import plan_segments  # api does not import runbook
+
+    batches, splits = runbook_update_stream(rb, steps)
+    return plan_segments(batches, splits=splits, max_t=max_t)

@@ -34,9 +34,16 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class Supervisor:
+    """``max_restarts`` caps total restarts over the whole run (transient
+    failures spread across many steps); ``max_restarts_per_step`` caps
+    restarts attributable to ONE step, so a deterministic crash at step t
+    raises after N attempts instead of silently burning the global budget
+    that unrelated transient failures still need."""
+
     manager: CheckpointManager
     checkpoint_every: int = 10
     max_restarts: int = 10
+    max_restarts_per_step: int = 5
 
     def run(
         self,
@@ -55,6 +62,7 @@ class Supervisor:
         fail_budget = dict(fail_at or {})
         state = init_state
         restarts = 0
+        per_step: Dict[int, int] = {}
         t = 0
         while t < n_steps:
             try:
@@ -68,7 +76,12 @@ class Supervisor:
                     log(f"checkpointed step {t}")
             except Exception as e:  # noqa: BLE001
                 restarts += 1
+                per_step[t] = per_step.get(t, 0) + 1
                 if restarts > self.max_restarts:
+                    raise
+                if per_step[t] > self.max_restarts_per_step:
+                    log(f"step {t} failed {per_step[t]} times "
+                        f"(deterministic crash?); giving up")
                     raise
                 latest = self.manager.latest()
                 log(f"failure at step {t} ({e}); restarting from "

@@ -4,6 +4,16 @@ batched queries, with no consolidation pauses (the paper's deployment story).
 
     python -m repro.launch.serve --minutes 0.2 --rate 64 --dim 32
     python -m repro.launch.serve --shards 8          # sharded fan-out path
+
+Durability (docs/ARCHITECTURE.md "Durability & recovery"): pass
+``--checkpoint-dir`` to checkpoint the index every ``--checkpoint-every``
+ticks and restore-and-replay after a crash.  ``--kill-at T`` injects a
+simulated process death at tick T — because ``VectorStream`` is
+stateless-deterministic (batch = f(seed, tick)), the replayed ticks rebuild
+exactly the state an uninterrupted run would have had:
+
+    python -m repro.launch.serve --checkpoint-dir /tmp/ckpt --kill-at 17
+    python -m repro.launch.serve --shards 4 --checkpoint-dir /tmp/ckpt
 """
 from __future__ import annotations
 
@@ -22,6 +32,13 @@ def main(argv=None) -> None:
     ap.add_argument("--mode", default="ip", choices=["ip", "fresh"])
     ap.add_argument("--shards", type=int, default=0,
                     help="run the shard_map fan-out index on N host devices")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="checkpoint the index here and restore on restart")
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="ticks between checkpoints")
+    ap.add_argument("--kill-at", type=int, default=-1,
+                    help="inject a simulated crash at this tick (once); "
+                         "requires --checkpoint-dir to recover")
     args = ap.parse_args(argv)
 
     if args.shards:
@@ -31,57 +48,105 @@ def main(argv=None) -> None:
 
     import jax
 
+    from ..checkpoint import CheckpointManager
     from ..configs.ann import test_scale
     from ..core import StreamingIndex
     from ..data import VectorStream
+    from ..ft.supervisor import SimulatedFailure
 
     n_cap = args.rate * (args.lifetime + 4)
     stream = VectorStream(dim=args.dim, rate=args.rate,
                           lifetime=args.lifetime)
+    mgr = (CheckpointManager(args.checkpoint_dir)
+           if args.checkpoint_dir else None)
+    kill_budget = {args.kill_at: 1} if args.kill_at >= 0 else {}
+    max_ext = args.rate * (args.ticks + 1)
+
+    def tick_stream(idx, t):
+        """One deterministic serving tick: absorb the stream step, answer
+        a query batch.  Pure function of (index state, t) — the replay
+        unit of the recovery loop."""
+        ins_ids, vecs, del_ids = stream.step_at(t)
+        # external-id semantics end to end: no host slot bookkeeping
+        idx.insert(ins_ids, vecs)
+        if len(del_ids):
+            idx.delete(del_ids)
+        return stream.queries_at(t, args.queries)
 
     if args.shards:
         from ..core.distributed import ShardedIndex
 
         mesh = jax.make_mesh((args.shards,), ("shard",))
         cfg = test_scale(args.dim, n_cap)
-        idx = ShardedIndex(cfg, mesh,
-                           max_external_id=args.rate * (args.ticks + 1))
-        for t in range(args.ticks):
-            ins_ids, vecs, del_ids = stream.step_at(t)
-            # external-id semantics end to end: no host slot bookkeeping
-            idx.insert(ins_ids, vecs)
-            if len(del_ids):
-                idx.delete(del_ids)
-            ids, shards, dists, comps = idx.search(
-                stream.queries_at(t, args.queries), k=10
-            )
-            if t % 10 == 0:
-                print(f"tick {t:3d} shards={args.shards} "
-                      f"comps/q={comps/args.queries:.0f}", flush=True)
+        t = 0
+        if mgr is not None and mgr.latest() is not None:
+            # elastic: the checkpoint's logical shards lay out over
+            # whatever --shards mesh this process was launched with
+            idx, t = ShardedIndex.restore(mgr, cfg, mesh)
+            print(f"restored sharded checkpoint at tick {t} "
+                  f"({idx.n_logical} logical shards on {idx.n_shards} "
+                  f"devices)", flush=True)
+        else:
+            idx = ShardedIndex(cfg, mesh, max_external_id=max_ext)
+            if mgr is not None:
+                idx.save(mgr, 0)
+        while t < args.ticks:
+            try:
+                if kill_budget.get(t, 0) > 0:
+                    kill_budget[t] -= 1
+                    raise SimulatedFailure(f"injected kill at tick {t}")
+                q = tick_stream(idx, t)
+                ids, shards, dists, comps = idx.search(q, k=10)
+                if t % 10 == 0:
+                    print(f"tick {t:3d} shards={args.shards} "
+                          f"comps/q={comps/args.queries:.0f}", flush=True)
+                t += 1
+                if mgr is not None and t % args.checkpoint_every == 0:
+                    idx.save(mgr, t)
+            except SimulatedFailure as e:
+                if mgr is None:
+                    raise
+                idx, t = ShardedIndex.restore(mgr, cfg, mesh)
+                print(f"crash ({e}); restored tick {t}, replaying",
+                      flush=True)
         print("sharded serving done")
         return
 
     cfg = test_scale(args.dim, n_cap)
-    idx = StreamingIndex(cfg, mode=args.mode,
-                         max_external_id=args.rate * (args.ticks + 1))
+    t = 0
+    if mgr is not None and mgr.latest() is not None:
+        idx, t = StreamingIndex.restore(mgr, cfg)
+        print(f"restored checkpoint at tick {t}", flush=True)
+    else:
+        idx = StreamingIndex(cfg, mode=args.mode, max_external_id=max_ext)
+        if mgr is not None:
+            idx.save(mgr, 0)
     lat = []
-    for t in range(args.ticks):
-        ins_ids, vecs, del_ids = stream.step_at(t)
-        idx.insert(ins_ids, vecs)
-        if len(del_ids):
-            idx.delete(del_ids)
-        q = stream.queries_at(t, args.queries)
-        t0 = time.perf_counter()
-        idx.search(q, k=10)
-        lat.append((time.perf_counter() - t0) / args.queries)
-        if t % 10 == 0:
-            r = idx.recall(q, k=10)
-            print(
-                f"tick {t:3d} active={idx.n_active:6d} recall@10={r:.3f} "
-                f"query={lat[-1]*1e3:.2f}ms "
-                f"consolidations={idx.counters.n_consolidations}",
-                flush=True,
-            )
+    while t < args.ticks:
+        try:
+            if kill_budget.get(t, 0) > 0:
+                kill_budget[t] -= 1
+                raise SimulatedFailure(f"injected kill at tick {t}")
+            q = tick_stream(idx, t)
+            t0 = time.perf_counter()
+            idx.search(q, k=10)
+            lat.append((time.perf_counter() - t0) / args.queries)
+            if t % 10 == 0:
+                r = idx.recall(q, k=10)
+                print(
+                    f"tick {t:3d} active={idx.n_active:6d} recall@10={r:.3f} "
+                    f"query={lat[-1]*1e3:.2f}ms "
+                    f"consolidations={idx.counters.n_consolidations}",
+                    flush=True,
+                )
+            t += 1
+            if mgr is not None and t % args.checkpoint_every == 0:
+                idx.save(mgr, t)
+        except SimulatedFailure as e:
+            if mgr is None:
+                raise
+            idx, t = StreamingIndex.restore(mgr, cfg)
+            print(f"crash ({e}); restored tick {t}, replaying", flush=True)
     lat_sorted = sorted(lat)
     print(
         f"served {args.ticks} ticks mode={args.mode}: "

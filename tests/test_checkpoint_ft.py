@@ -6,7 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, restore_onto
+from repro.checkpoint import (
+    CheckpointManager,
+    CheckpointMismatchError,
+    restore_onto,
+)
 from repro.data import TokenStream
 from repro.ft import SimulatedFailure, Supervisor
 
@@ -53,8 +57,83 @@ def test_incomplete_checkpoint_is_ignored(tmp_path):
 def test_structure_mismatch_raises(tmp_path):
     mgr = CheckpointManager(tmp_path)
     mgr.save(1, _tree())
-    with pytest.raises(AssertionError):
+    # typed error, not a bare assert (which vanishes under python -O)
+    with pytest.raises(CheckpointMismatchError, match="structure mismatch"):
         mgr.load(like={"different": jnp.zeros(3)})
+
+
+def test_leaf_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    wrong = _tree()
+    wrong["a"] = jnp.zeros((8, 5), jnp.float32)   # same keys, wrong shape
+    with pytest.raises(CheckpointMismatchError, match="leaf 'a'"):
+        mgr.load(like=wrong)
+    wrong["a"] = jnp.zeros((8, 4), jnp.int32)     # wrong dtype
+    with pytest.raises(CheckpointMismatchError, match="leaf 'a'"):
+        mgr.load(like=wrong)
+
+
+def test_torn_leaf_detected(tmp_path):
+    """A leaf file that does not match the manifest's recorded shape/dtype
+    (e.g. torn by power loss) is a typed error, not silently-wrong
+    tensors."""
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    d = tmp_path / "step_00000001"
+    # overwrite one leaf with a valid .npy of the wrong shape
+    np.save(d / "leaf_00000.npy", np.zeros((2, 2), np.float32))
+    with pytest.raises(CheckpointMismatchError, match="torn leaf"):
+        mgr.load(like=t)
+    # and with unreadable bytes
+    (d / "leaf_00000.npy").write_bytes(b"garbage")
+    with pytest.raises(CheckpointMismatchError, match="unreadable leaf"):
+        mgr.load(like=t)
+
+
+@pytest.mark.parametrize("event", ["leaf:1", "manifest"])
+def test_kill_before_rename_keeps_previous_step(tmp_path, event):
+    """A kill at any point BEFORE the commit rename must leave the previous
+    complete step as ``latest()`` — the half-written tmp dir is invisible."""
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+
+    def boom(e):
+        if e == event:
+            raise SimulatedFailure(f"killed at {e}")
+
+    with pytest.raises(SimulatedFailure):
+        mgr.save(2, _tree(seed=1), on_event=boom)
+    assert mgr.latest() == 1
+    step, got, _ = mgr.load(like=t)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the interrupted step is fully retryable
+    mgr.save(2, _tree(seed=1))
+    assert mgr.latest() == 2
+
+
+def test_kill_after_rename_commits_new_step(tmp_path):
+    """A kill right AFTER the rename is past the commit point: latest()
+    must see the new step, complete and loadable."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+
+    def boom(e):
+        if e == "rename":
+            raise SimulatedFailure("killed after rename")
+
+    t2 = _tree(seed=1)
+    with pytest.raises(SimulatedFailure):
+        mgr.save(2, t2, on_event=boom)
+    assert mgr.latest() == 2
+    step, got, _ = mgr.load(like=t2)
+    assert step == 2
+    for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def _make_train():
@@ -103,6 +182,31 @@ def test_supervisor_gives_up_after_max_restarts(tmp_path):
     sup = Supervisor(mgr, checkpoint_every=5, max_restarts=2)
     with pytest.raises(SimulatedFailure):
         sup.run(w0, step_fn, 10, fail_at={3: 99})
+
+
+def test_supervisor_per_step_budget(tmp_path):
+    """A deterministic crash at ONE step raises after max_restarts_per_step
+    attempts instead of draining the global budget that transient failures
+    elsewhere still need."""
+    w0, step_fn = _make_train()
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    sup = Supervisor(mgr, checkpoint_every=5, max_restarts=50,
+                     max_restarts_per_step=3)
+    logs = []
+    with pytest.raises(SimulatedFailure):
+        sup.run(w0, step_fn, 10, fail_at={3: 99}, log=logs.append)
+    assert any("giving up" in s for s in logs)
+    # the per-step budget stops at exactly 1 + max_restarts_per_step
+    # attempts — the global budget (50) was never the limiter
+    assert sum("failure at step 3" in s for s in logs) == 3
+
+    # transient failures spread over steps stay within the per-step budget
+    # and complete under the same settings
+    sup2 = Supervisor(CheckpointManager(tmp_path / "ckpt2"),
+                      checkpoint_every=5, max_restarts=50,
+                      max_restarts_per_step=3)
+    _, info = sup2.run(w0, step_fn, 10, fail_at={2: 2, 6: 2})
+    assert info["restarts"] == 4 and info["final_step"] == 10
 
 
 def test_elastic_restore_across_meshes(tmp_path):

@@ -214,6 +214,93 @@ PARITY_SCRIPT = textwrap.dedent("""
 """)
 
 
+# Elastic reshard-on-restore: checkpoints carry n_logical (the routing
+# modulus and stacked leading axis), so the same L logical shards lay out
+# over any mesh whose size divides L — with bit-identical answers, because
+# every per-row program is independent of the physical layout.
+RESHARD_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings; warnings.filterwarnings("ignore")
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs.ann import test_scale as ann_cfg
+    from repro.core.distributed import ShardedIndex
+    from repro.core import CheckpointMismatchError, StreamingIndex, \\
+        make_dataset
+    from repro.checkpoint import CheckpointManager
+
+    cfg = ann_cfg(16, n_cap=256)
+    devs = np.array(jax.devices())
+    mesh4 = Mesh(devs[:4], ("shard",))
+    mesh2 = Mesh(devs[:2], ("shard",))
+    mesh1 = Mesh(devs[:1], ("shard",))
+    data, queries = make_dataset(400, 16, n_queries=12, seed=3)
+    ids = np.arange(400)
+
+    # (1) physical-layout independence without any checkpoint: the same op
+    # stream on S=4 and S=2 (both L=4) produces bit-identical stacked state
+    def feed(idx):
+        idx.insert(ids[:300], data[:300])
+        idx.delete(ids[:60])
+        idx.insert(ids[300:], data[300:])
+        return idx
+    a = feed(ShardedIndex(cfg, mesh4, n_logical=4, max_external_id=1024))
+    b = feed(ShardedIndex(cfg, mesh2, n_logical=4, max_external_id=1024))
+    for x, y in zip(jax.tree.leaves(a.states), jax.tree.leaves(b.states)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+            "S=4 and S=2 layouts of L=4 diverged"
+    print("layout independence ok")
+
+    # (2) save under S=4, restore under S'=2 (and S'=1): identical top-k,
+    # and the restored index keeps accepting updates in lockstep
+    r4 = a.search(queries, k=5, l=32)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        a.save(mgr, 11)
+        for mesh, S in ((mesh2, 2), (mesh1, 1)):
+            idx, step = ShardedIndex.restore(mgr, cfg, mesh)
+            assert step == 11 and idx.n_shards == S
+            assert idx.n_logical == 4 and idx.rows_per_shard == 4 // S
+            got = idx.search(queries, k=5, l=32)
+            assert np.array_equal(r4[0], got[0]), "resharded ids diverged"
+            assert np.array_equal(r4[1], got[1]), "owner shards diverged"
+            assert np.array_equal(r4[2], got[2]), "dists diverged"
+            # partitioned search agrees under the new layout too
+            p = idx.search(queries, k=5, l=32, partition="queries")
+            assert np.array_equal(got[0], p[0])
+
+        # continue updating original and resharded side by side
+        idx2, _ = ShardedIndex.restore(mgr, cfg, mesh2)
+        more = np.arange(400, 460)
+        vecs = data[:60] + 0.01
+        a.insert(more, vecs); idx2.insert(more, vecs)
+        a.delete(ids[100:140]); idx2.delete(ids[100:140])
+        for x, y in zip(jax.tree.leaves(a.states),
+                        jax.tree.leaves(idx2.states)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                "post-restore update streams diverged"
+        ra = a.search(queries, k=5, l=32)
+        rb = idx2.search(queries, k=5, l=32)
+        assert np.array_equal(ra[0], rb[0])
+        print("reshard parity ok")
+
+        # (3) typed errors: a 3-device mesh does not divide L=4, and a
+        # sharded checkpoint cannot restore as a single StreamingIndex
+        try:
+            ShardedIndex.restore(mgr, cfg, Mesh(devs[:3], ("shard",)))
+            raise SystemExit("expected CheckpointMismatchError")
+        except CheckpointMismatchError:
+            pass
+        try:
+            StreamingIndex.restore(mgr, cfg)
+            raise SystemExit("expected CheckpointMismatchError")
+        except CheckpointMismatchError:
+            pass
+    print("OK reshard")
+""")
+
+
 def _run_subprocess(script: str, timeout: int = 900):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
@@ -238,6 +325,14 @@ def test_sharded_compact_parity_subprocess():
     assert "parity ok" in out
     assert "partition ok" in out
     assert "OK fresh-consolidated recall=" in out
+
+
+@pytest.mark.slow
+def test_elastic_reshard_on_restore_subprocess():
+    out = _run_subprocess(RESHARD_SCRIPT)
+    assert "layout independence ok" in out
+    assert "reshard parity ok" in out
+    assert "OK reshard" in out
 
 
 def test_route_is_stable_and_balanced():

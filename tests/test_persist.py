@@ -1,0 +1,209 @@
+"""Durability layer: IndexState checkpoint/restore and crash-mid-segment
+recovery (core/persist.py).
+
+The load-bearing contract: restore + deterministic replay of the segment
+tail is BIT-IDENTICAL to an uninterrupted run — for both update policies,
+and including crashes that land mid-checkpoint-write (where ``latest()``
+must fall back to the previous complete step)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.ann import test_scale as ann_cfg
+from repro.core import (
+    CheckpointMismatchError,
+    StreamingIndex,
+    clone_state,
+    init_index_state,
+    make_runbook,
+    restore_index,
+    run_segments,
+    run_segments_supervised,
+    runbook_segment_plan,
+    save_index,
+)
+from repro.ft import SimulatedFailure
+
+CFG = ann_cfg(dim=16, n_cap=256)
+
+
+def _plan(n=300, t_max=12, max_t=4, seed=0):
+    rb = make_runbook("sliding_window", n=n, dim=CFG.dim, t_max=t_max,
+                      seed=seed)
+    return runbook_segment_plan(rb, max_t=max_t)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- save_index / restore_index ---------------------------------------------
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    plan = _plan()
+    state, _ = run_segments(
+        init_index_state(CFG, 2048), CFG, plan, policy="ip"
+    )
+    mgr = CheckpointManager(tmp_path)
+    save_index(mgr, 7, state, CFG, policy="ip", extra={"tag": "t"})
+    step, got, extra = restore_index(mgr, CFG)
+    assert step == 7
+    assert extra["user"]["tag"] == "t"
+    assert extra["index"]["policy"] == "ip"
+    assert extra["index"]["n_logical"] == 0
+    _assert_trees_equal(state, got)
+
+
+def test_restore_validates_config(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    save_index(mgr, 1, init_index_state(CFG, 1024), CFG)
+    with pytest.raises(CheckpointMismatchError, match="config mismatch"):
+        restore_index(mgr, dataclasses.replace(CFG, dim=CFG.dim * 2))
+    with pytest.raises(CheckpointMismatchError, match="config mismatch"):
+        restore_index(mgr, dataclasses.replace(CFG, metric="ip"))
+    # serving knobs may drift freely
+    _, _, _ = restore_index(
+        mgr, dataclasses.replace(CFG, l_search=CFG.l_search * 2)
+    )
+
+
+def test_restore_validates_policy_and_schema(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    save_index(mgr, 1, init_index_state(CFG, 1024), CFG, policy="fresh")
+    with pytest.raises(CheckpointMismatchError, match="policy"):
+        restore_index(mgr, CFG, policy="ip")
+    # policy=None adopts the checkpoint's
+    _, _, extra = restore_index(mgr, CFG)
+    assert extra["index"]["policy"] == "fresh"
+    # a checkpoint not written by save_index has no index metadata
+    mgr2 = CheckpointManager(tmp_path / "raw")
+    mgr2.save(1, {"w": np.zeros(3)})
+    with pytest.raises(CheckpointMismatchError, match="index metadata"):
+        restore_index(mgr2, CFG)
+
+
+def test_restore_no_checkpoints(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_index(CheckpointManager(tmp_path), CFG)
+
+
+# -- crash-mid-segment recovery ---------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["ip", "fresh"])
+def test_crash_recovery_bit_identical(tmp_path, policy):
+    """Injected crashes mid-stream — including one that kills a checkpoint
+    save before its commit rename — recover to the exact state of an
+    uninterrupted run, for both the in-place and the fresh policy."""
+    plan = _plan(n=400, t_max=16, max_t=2)
+    state0 = init_index_state(CFG, 2048)
+    ref, ref_results = run_segments(
+        clone_state(state0), CFG, plan, policy=policy
+    )
+    mgr = CheckpointManager(tmp_path)
+    got, results, info = run_segments_supervised(
+        mgr, clone_state(state0), CFG, plan, policy=policy,
+        checkpoint_every=3,
+        fail_at={2: 1, 5: 2},
+        # kill save(3) after its manifest but before the rename: latest()
+        # must fall back to step 0 and replay the longer tail
+        crash_in_save={3: "manifest"},
+    )
+    assert info["restarts"] == 4
+    assert info["final_segment"] == len(plan.segments)
+    _assert_trees_equal(ref, got)
+    assert all(r is not None for r in results)
+    for a, b in zip(ref_results, results):
+        np.testing.assert_array_equal(np.asarray(a.ok), np.asarray(b.ok))
+
+
+def test_crash_recovery_kill_between_leaves(tmp_path):
+    """A kill between leaf writes leaves no manifest at all — same
+    fallback path, exercised at a different point of the commit
+    protocol."""
+    plan = _plan(t_max=8, max_t=2)
+    state0 = init_index_state(CFG, 2048)
+    ref, _ = run_segments(clone_state(state0), CFG, plan, policy="ip")
+    mgr = CheckpointManager(tmp_path)
+    got, _, info = run_segments_supervised(
+        mgr, clone_state(state0), CFG, plan, policy="ip",
+        checkpoint_every=2, crash_in_save={2: "leaf:3"},
+    )
+    assert info["restarts"] == 1
+    _assert_trees_equal(ref, got)
+
+
+def test_supervised_no_failures_matches_plain_run(tmp_path):
+    plan = _plan(t_max=8, max_t=2)
+    state0 = init_index_state(CFG, 2048)
+    ref, _ = run_segments(clone_state(state0), CFG, plan, policy="ip")
+    mgr = CheckpointManager(tmp_path)
+    got, _, info = run_segments_supervised(
+        mgr, clone_state(state0), CFG, plan, policy="ip",
+        checkpoint_every=4,
+    )
+    assert info["restarts"] == 0
+    _assert_trees_equal(ref, got)
+    # the final state is itself checkpointed: a cold restore resumes it
+    step, st, _ = restore_index(mgr, CFG)
+    assert step == len(plan.segments)
+    _assert_trees_equal(ref, st)
+
+
+def test_supervised_per_segment_budget(tmp_path):
+    """A deterministic crash at one segment raises after
+    max_restarts_per_step attempts, without draining the global budget."""
+    plan = _plan(t_max=8, max_t=2)
+    mgr = CheckpointManager(tmp_path)
+    logs = []
+    with pytest.raises(SimulatedFailure):
+        run_segments_supervised(
+            mgr, init_index_state(CFG, 2048), CFG, plan, policy="ip",
+            checkpoint_every=2, max_restarts=50, max_restarts_per_step=2,
+            fail_at={1: 99}, log=logs.append,
+        )
+    assert any("giving up" in s for s in logs)
+
+
+# -- StreamingIndex.save / .restore -----------------------------------------
+
+
+def test_streaming_index_save_restore(tmp_path):
+    rng = np.random.default_rng(0)
+    idx = StreamingIndex(CFG, mode="ip", max_external_id=2048)
+    ids = np.arange(120)
+    idx.insert(ids, rng.normal(size=(120, CFG.dim)).astype(np.float32))
+    idx.delete(ids[:30])
+    q = rng.normal(size=(8, CFG.dim)).astype(np.float32)
+    ref = idx.search(q, k=5)
+
+    mgr = CheckpointManager(tmp_path)
+    idx.save(mgr, 3)
+    idx2, step = StreamingIndex.restore(mgr, CFG)
+    assert step == 3 and idx2.mode == "ip"
+    assert idx2.max_external_id == idx.max_external_id
+    # host accounting resumed
+    assert idx2.counters.n_inserts == idx.counters.n_inserts
+    assert idx2.counters.n_deletes == idx.counters.n_deletes
+    _assert_trees_equal(idx.istate, idx2.istate)
+    got = idx2.search(q, k=5)
+    np.testing.assert_array_equal(ref[0], got[0])
+    np.testing.assert_array_equal(ref[1], got[1])
+
+    # both keep absorbing updates identically after the restore
+    more = np.arange(200, 240)
+    vecs = rng.normal(size=(40, CFG.dim)).astype(np.float32)
+    idx.insert(more, vecs)
+    idx2.insert(more, vecs)
+    _assert_trees_equal(idx.istate, idx2.istate)
+
+    # explicit-mode restore validates against the checkpoint
+    with pytest.raises(CheckpointMismatchError, match="policy"):
+        StreamingIndex.restore(mgr, CFG, mode="fresh")
