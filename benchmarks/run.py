@@ -21,6 +21,7 @@ MODULES = [
     "search_bench",
     "update_bench",
     "shard_bench",
+    "serve_bench",
     "recover_bench",
     "roofline",
 ]

@@ -1,0 +1,248 @@
+"""Open-loop serving benchmark: Poisson arrivals through the async front
+door (``repro.serving``) at varying rates, query-only vs mixed load.
+
+The paper's serving claim is a LATENCY claim: because updates are in-place
+and reads run against published snapshots, query tail latency should not
+degrade materially when an update stream runs concurrently.  This bench
+makes that measurable:
+
+  * **open-loop arrivals** — query inter-arrival times are exponential
+    (Poisson process) on a virtual clock, so queueing delay is real: a
+    slow dispatch makes later arrivals wait, exactly as in a deployment
+    (closed-loop benches hide queueing by construction);
+  * **discrete-event drive** — the front door never reads a clock, so the
+    bench steps it through the merged arrival trace event by event,
+    pumping deadline expiries between events.  Service times on the
+    virtual timeline are the MEASURED wall times of the real compiled
+    calls (see ``repro/serving/front.py`` on the two-lane model);
+  * **three workloads per rate** — ``query_only`` (the baseline),
+    ``mixed`` (same query trace + a fixed insert/delete batch cadence on
+    the writer lane, snapshot-isolated), and ``mixed_serialized`` (same
+    combined trace with ``serialize_updates=True`` — the old
+    single-threaded tick loop where search queues behind apply; the gap
+    between the two mixed rows is what the snapshot front door buys);
+  * arrival rates are set RELATIVE to measured capacity (one warm
+    full-bucket dispatch), so the same fractions-of-saturation sweep runs
+    on any box.
+
+Emits ``BENCH_serve.json``: per (workload, rate) cell, p50/p95/p99 and
+mean latency, achieved qps and update lanes/s, batch-fill ratio and mean
+queue depth.  In --smoke mode the snapshot-isolation gate is enforced:
+mixed-load p99 must stay within 1.5x + 2 ms of query-only p99 at the
+lowest (smoke) rate.
+
+Usage: python -m benchmarks.serve_bench [--smoke] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+from .common import Row, ann_params, scale
+
+
+def _drive(front, trace, horizon: float) -> None:
+    """Step the front door through a merged, time-sorted event trace,
+    firing deadline expiries between events (discrete-event loop)."""
+    for t, kind, payload in trace:
+        while True:
+            nd = front.next_event_time()
+            if nd is None or nd > t:
+                break
+            front.pump(nd)
+        if kind == "q":
+            front.submit_query(payload, t)
+        else:
+            front.submit_update(payload, t)
+        front.pump(t)
+    while True:
+        nd = front.next_event_time()
+        if nd is None:
+            break
+        front.pump(max(nd, horizon))
+
+
+def _make_trace(rng, *, rate: float, horizon: float, dim: int,
+                update_lanes: int, update_period: float, n0: int,
+                ext_start: int):
+    """Merged (t, kind, payload) event list: Poisson query arrivals at
+    ``rate``/s plus (for mixed load) alternating insert/delete batches of
+    ``update_lanes`` lanes every ``update_period`` seconds.  Inserts mint
+    fresh external ids from ``ext_start``; deletes consume the oldest
+    still-live ids (base ids first), FreshDiskANN-runbook style."""
+    import numpy as np
+
+    from repro.core import delete_batch, insert_batch
+
+    events = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= horizon:
+            break
+        events.append((t, "q", rng.standard_normal(dim).astype(np.float32)))
+    if update_lanes:
+        live = list(range(n0))      # deletion queue: oldest first
+        nxt = ext_start
+        k = 0
+        tu = update_period
+        while tu < horizon:
+            if k % 2 == 0:
+                ids = np.arange(nxt, nxt + update_lanes)
+                nxt += update_lanes
+                live.extend(ids.tolist())
+                batch = insert_batch(
+                    ids,
+                    rng.standard_normal((update_lanes, dim)).astype(
+                        np.float32),
+                )
+            else:
+                ids = np.asarray(live[:update_lanes])
+                del live[:update_lanes]
+                batch = delete_batch(ids, dim)
+            events.append((tu, "u", batch))
+            k += 1
+            tu += update_period
+    events.sort(key=lambda e: e[0])
+    return events
+
+
+def run_bench(*, dim: int, n0: int, rates_frac, n_queries: int,
+              bucket: int, deadline_s: float, update_lanes: int,
+              update_period: float, seed: int = 0) -> dict:
+    import numpy as np
+
+    from repro.core import StreamingIndex, clone_state
+    from repro.serving import ServingFront, StreamingEngine
+
+    cfg = ann_params("low", dim, n0 * 4)
+    idx = StreamingIndex(cfg, mode="ip", max_external_id=n0 * 64,
+                         batch_updates=True)
+    rng = np.random.default_rng(seed)
+    idx.insert(np.arange(n0),
+               rng.standard_normal((n0, dim)).astype(np.float32))
+    base = clone_state(idx.istate)
+
+    def make_front(serialize: bool):
+        # every cell starts from the same bit-identical base state
+        idx.istate = clone_state(base)
+        front = ServingFront(
+            StreamingEngine(idx), deadline_s=deadline_s,
+            max_bucket=bucket, k=10, serialize_updates=serialize,
+        )
+        front.warmup(update_buckets=[update_lanes])
+        return front
+
+    # measured capacity: one warm full-bucket dispatch
+    f0 = make_front(False)
+    snap = f0.store.acquire()
+    q = rng.standard_normal((bucket, dim)).astype(np.float32)
+    svc = min(
+        _timed(lambda: f0.engine.search(snap.state, q, 10, None))
+        for _ in range(3)
+    )
+    f0.store.release(snap)
+    capacity_qps = bucket / svc
+
+    report = {
+        "dim": dim, "n0": n0, "bucket": bucket,
+        "deadline_ms": deadline_s * 1e3,
+        "update_lanes": update_lanes,
+        "update_period_ms": update_period * 1e3,
+        "full_bucket_service_ms": svc * 1e3,
+        "capacity_qps": capacity_qps,
+        "note": "open-loop Poisson arrivals on a virtual clock; service "
+                "times are measured wall times of the real compiled "
+                "calls; rates are fractions of measured capacity",
+        "cells": [],
+    }
+    workloads = [
+        ("query_only", 0, False),
+        ("mixed", update_lanes, False),
+        ("mixed_serialized", update_lanes, True),
+    ]
+    for frac in rates_frac:
+        rate = max(frac * capacity_qps, 1.0)
+        horizon = n_queries / rate
+        for name, lanes, serialize in workloads:
+            front = make_front(serialize)
+            trace = _make_trace(
+                np.random.default_rng(seed + 1), rate=rate,
+                horizon=horizon, dim=dim, update_lanes=lanes,
+                update_period=update_period, n0=n0, ext_start=n0,
+            )
+            _drive(front, trace, horizon)
+            s = front.metrics.stats(horizon_s=horizon)
+            s.update(workload=name, rate_frac=frac, offered_qps=rate)
+            report["cells"].append(s)
+    return report
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(out_path: str = "BENCH_serve.json", smoke: bool = False) -> List[Row]:
+    if smoke:
+        dim, n0, n_queries = 16, 512, 200
+        rates_frac = (0.25, 0.5, 0.8)
+        bucket, deadline_s = 16, 0.005
+        update_lanes, update_period = 16, 0.02
+    else:
+        dim = scale(32, 64)
+        n0 = scale(1024, 8192)
+        n_queries = scale(400, 2000)
+        rates_frac = (0.25, 0.5, 0.8, 1.1)
+        bucket = scale(16, 64)
+        deadline_s = 0.005
+        update_lanes, update_period = scale(16, 64), 0.02
+    report = run_bench(
+        dim=dim, n0=n0, rates_frac=rates_frac, n_queries=n_queries,
+        bucket=bucket, deadline_s=deadline_s, update_lanes=update_lanes,
+        update_period=update_period,
+    )
+    report["smoke"] = smoke
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    rows: List[Row] = []
+    for c in report["cells"]:
+        rows.append(Row(
+            f"serve_bench.{c['workload']}@{c['rate_frac']:.2f}cap",
+            c["mean_ms"] * 1e3,
+            f"p50_ms={c['p50_ms']:.2f};p99_ms={c['p99_ms']:.2f};"
+            f"qps={c['qps']:.0f};upd_lanes_s={c['updates_per_s']:.0f};"
+            f"fill={c['batch_fill']:.2f};depth={c['mean_queue_depth']:.1f}",
+        ))
+    rows.append(Row("serve_bench.report", 0.0, f"written={out_path}"))
+
+    if smoke:
+        # snapshot-isolation gate: at the smoke (lowest) rate, running the
+        # update stream concurrently must not blow up query tail latency —
+        # mixed p99 within 1.5x + 2 ms of query-only p99
+        frac0 = min(c["rate_frac"] for c in report["cells"])
+        cell = {c["workload"]: c for c in report["cells"]
+                if c["rate_frac"] == frac0}
+        qo, mx = cell["query_only"], cell["mixed"]
+        bound = qo["p99_ms"] * 1.5 + 2.0
+        assert mx["p99_ms"] <= bound, (
+            f"mixed-load p99 {mx['p99_ms']:.2f} ms exceeds the "
+            f"snapshot-isolation bound {bound:.2f} ms "
+            f"(query-only p99 {qo['p99_ms']:.2f} ms at "
+            f"{frac0:.2f}x capacity)"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + the mixed-vs-query-only p99 gate")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    for row in run(out_path=args.out, smoke=args.smoke):
+        print(row.csv())

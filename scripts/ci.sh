@@ -43,6 +43,13 @@ echo "== sharded streams: compact vs replicate routing (BENCH_update.json:shard)
 python -m benchmarks.shard_bench --smoke --out BENCH_update.json
 cat BENCH_update.json
 
+echo "== serving front door: open-loop latency under load (BENCH_serve.json) =="
+# --smoke enforces the snapshot-isolation gate: at the smoke rate,
+# mixed-load (queries + concurrent update stream) p99 must stay within
+# 1.5x + 2ms of query-only p99 — updates must not stall the read side
+python -m benchmarks.serve_bench --smoke --out BENCH_serve.json
+cat BENCH_serve.json
+
 echo "== durability: save/restore + crash recovery (BENCH_recover.json) =="
 # --smoke enforces the determinism contract: a supervised run with an
 # injected crash (incl. a kill mid-checkpoint-write) recovers to a state

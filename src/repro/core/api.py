@@ -131,6 +131,30 @@ def clone_state(state):
     return jax.tree.map(jnp.copy, state)
 
 
+class SnapshotHandle(NamedTuple):
+    """A sequence-numbered read-only view of an index state.
+
+    ``state`` is a DEEP COPY of the writer's pytree at publication time
+    (``take_snapshot`` clones), so subsequent donated updates to the
+    writer's handle can never touch its buffers: searches against a
+    snapshot observe exactly the updates applied before it was taken and
+    none after — the snapshot-isolation contract the serving layer
+    (``repro/serving``) builds its double-buffered swap protocol on.
+    ``seq`` is the host-side publication sequence number."""
+
+    seq: int
+    state: IndexState
+
+
+def take_snapshot(state, seq: int = 0) -> SnapshotHandle:
+    """Clone ``state`` into an immutable ``SnapshotHandle`` tagged ``seq``.
+
+    The clone is the isolation boundary: the returned handle's buffers are
+    fresh, so the caller may keep donating its writer handle to
+    ``apply``/``apply_segment`` while readers search the snapshot."""
+    return SnapshotHandle(seq=int(seq), state=clone_state(state))
+
+
 # ---------------------------------------------------------------------------
 # Update policies (the old ``mode`` strings, as registered objects)
 # ---------------------------------------------------------------------------
@@ -797,17 +821,29 @@ def plan_segments(
     *,
     splits=None,
     max_t: int = 64,
+    keys=None,
 ) -> SegmentPlan:
     """Chop a list of same-or-mixed-width ``UpdateBatch``es into
     ``Segment``s.  ``splits``: optional per-step static split (one per
     step; consecutive steps only share a segment when their (B, split)
     agree).  ``max_t``: segment length cap (a power of two keeps T buckets
-    trivially aligned)."""
+    trivially aligned).  ``keys``: optional per-step hashable grouping key
+    folded into the segment boundary condition — consecutive steps share a
+    segment only when their keys agree.  The sharded compact router uses
+    this to fold each step's per-shard compact bucket into the plan
+    (``ShardedIndex.update_stream``): segments then carry one static
+    (T, Bc) shape decided at plan time, so consecutive segments with the
+    same owner distribution share one compiled program instead of
+    re-deriving (and re-packing) a bucket per segment."""
     steps = list(steps)
     if splits is None:
         splits = [None] * len(steps)
     if len(splits) != len(steps):
         raise ValueError("one split per step required")
+    if keys is None:
+        keys = [None] * len(steps)
+    if len(keys) != len(steps):
+        raise ValueError("one key per step required")
     max_t = max(1, max_t)
 
     segments = []
@@ -816,6 +852,7 @@ def plan_segments(
         b = steps[i].kind.shape[0]
         dim = steps[i].vector.shape[1]
         split = splits[i]
+        key = keys[i]
         j = i
         while (
             j < len(steps)
@@ -823,6 +860,7 @@ def plan_segments(
             and steps[j].kind.shape[0] == b
             and steps[j].vector.shape[1] == dim
             and splits[j] == split
+            and keys[j] == key
         ):
             j += 1
         group = steps[i:j]
@@ -951,6 +989,7 @@ __all__ = [
     "TRACE_UNROLL",
     "Segment",
     "SegmentPlan",
+    "SnapshotHandle",
     "UpdatePolicy",
     "apply",
     "apply_segment",
@@ -975,4 +1014,5 @@ __all__ = [
     "search",
     "segment_scan",
     "segment_step",
+    "take_snapshot",
 ]

@@ -167,6 +167,22 @@ def _release_tombstones(state: GraphState, cfg: ANNConfig) -> GraphState:
     )
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _scatter_shard(graphs: GraphState, row: GraphState, s) -> GraphState:
+    """Write one shard's graph back into the donated stacked pytree.
+
+    ``graphs`` is DONATED: XLA updates the consolidated rows in the
+    existing buffers instead of rebuilding every stacked leaf, so the
+    scatter is O(one shard) in copies.  ``s`` is a traced scalar — one
+    compiled program serves every shard id (no per-shard recompiles)."""
+    return jax.tree.map(
+        lambda full, new: jax.lax.dynamic_update_index_in_dim(
+            full, new.astype(full.dtype), s, 0
+        ),
+        graphs, row,
+    )
+
+
 def consolidate_stacked(graphs: GraphState, cfg: ANNConfig, consolidate_fn,
                         shard_ids) -> GraphState:
     """Run a per-shard consolidation pass over a STACKED ``GraphState``
@@ -175,20 +191,17 @@ def consolidate_stacked(graphs: GraphState, cfg: ANNConfig, consolidate_fn,
     For each shard in ``shard_ids``: gather that shard's graph off the
     stacked pytree, run ``consolidate_fn(graph, cfg)`` (e.g. the fresh
     policy's host-orchestrated Algorithm 4, or ``light_consolidate`` under
-    ``force``), and scatter the result back into the stack.  This is the
-    paper's offline/background activity lifted to the sharded deployment,
-    so it optimises for simplicity over copies: each un-jitted
-    ``.at[s].set`` scatter rebuilds the full stacked leaves (untriggered
-    shards keep their CONTENTS, but the buffers are reallocated per
-    consolidated shard) — acceptable off the serving path; a donated
-    jitted scatter would make it O(one shard) (ROADMAP follow-on).
+    ``force``), and scatter the result back with the jitted DONATED
+    ``_scatter_shard`` — O(one shard) in copies, one compiled program for
+    every shard id.  (The pre-rework path rebuilt every stacked leaf with
+    an un-jitted ``.at[s].set`` per consolidated shard.)  The caller's
+    ``graphs`` handle is consumed: use the RETURNED stack, exactly as with
+    the donated update front doors.
     """
     for s in shard_ids:
         g = jax.tree.map(lambda x: x[s], graphs)
         g = consolidate_fn(g, cfg)
-        graphs = jax.tree.map(
-            lambda full, new: full.at[s].set(new), graphs, g
-        )
+        graphs = _scatter_shard(graphs, g, jnp.int32(s))
     return graphs
 
 

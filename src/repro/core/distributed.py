@@ -82,9 +82,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .api import (
+    _compact_owner_batch_np,
     apply,
     compact_owner_batch,
-    compact_owner_segment,
     delete_batch,
     device_sweep,
     get_policy,
@@ -97,16 +97,24 @@ from .backend import BIG
 from .consolidate import consolidate_stacked
 from .persist import restore_index, save_index
 from .search_batched import batched_greedy_search, merge_topk, next_bucket
-from .types import INVALID, ANNConfig, IndexState, clip_ids, init_index_state
+from .types import (
+    INVALID, ANNConfig, IndexState, UpdateBatch, clip_ids,
+    init_index_state, noop_update_batch,
+)
 
 # Incremented once per trace (not per call) of each SPMD program, with the
 # traced op-tensor shape recorded in TRACE_SHAPES: the sharding tests pin
 # both the power-of-two bucketing discipline (ragged batches share
 # compiles) and the compact-routing contract (per-shard lane width <=
 # next_bucket(ceil(B / S)), S-fold smaller than the replicated width).
+# ``segment_pack`` is the one host-side entry: it counts owner-compaction
+# packs of individual stream steps (``update_stream`` packs every step
+# EXACTLY once, at plan time — the owner-aware planning test pins that no
+# step is ever re-packed per segment).
 TRACE_COUNTER = {
     "update_compact": 0,
     "segment_compact": 0,
+    "segment_pack": 0,
     "update_replicate": 0,
     "segment_replicate": 0,
     "search_replicate": 0,
@@ -627,48 +635,98 @@ class ShardedIndex:
         ``needs_consolidation`` flag fired gets its graph gathered, passed
         through the policy's host pass and scattered back (consolidation
         is the paper's offline activity — the transfer is off the serving
-        path)."""
+        path).
+
+        **Owner-aware planning** (compact routing): every stream step is
+        owner-packed exactly ONCE up front, and its per-shard compact
+        bucket ``bc`` is folded into the ``plan_segments`` key.  Segments
+        therefore carry a static (L, T, Bc) shape decided at plan time —
+        consecutive segments whose steps share an owner distribution share
+        ONE compiled program, and no step is ever re-packed per segment
+        (the pre-rework path re-derived a bucket and re-packed every step
+        of every segment inside the segment loop)."""
         pol = get_policy(self.policy)
-        plan = plan_segments(batches, max_t=max_t)
         results = []
-        for seg in plan.segments:
-            owners = np.where(
-                np.asarray(seg.ops.valid),
-                self.route(np.asarray(seg.ops.ext_id, np.int64)), -1,
-            ).astype(np.int32)                          # (T, B)
-            if self.routing == "compact":
-                cops, pos, _ = compact_owner_segment(
-                    seg.ops, owners, self.n_logical
-                )
-                cops = jax.device_put(cops, self._shard_spec)
-                self.states, res = self._update_segment_compact(
-                    self.states, cops
-                )
-                # per-lane results back to caller lane order: without this
-                # an ok=False cell of the owner-packed (S, T, Bc) tensor
-                # is not attributable to a stream lane
-                ok_c = np.asarray(res.ok)
-                slot_c = np.asarray(res.slot)
-                comps_c = np.asarray(res.n_comps)
-                m = pos >= 0
-                t_of = np.broadcast_to(
-                    np.arange(pos.shape[0])[:, None], pos.shape
-                )
-                ok = np.zeros(pos.shape, bool)
-                slot = np.full(pos.shape, INVALID, np.int32)
-                comps = np.zeros(pos.shape, comps_c.dtype)
-                ok[m] = ok_c[owners[m], t_of[m], pos[m]]
-                slot[m] = slot_c[owners[m], t_of[m], pos[m]]
-                comps[m] = comps_c[owners[m], t_of[m], pos[m]]
-                res = res._replace(slot=slot, ok=ok, n_comps=comps)
-            else:
-                self.states, res = self._update_segment(
-                    self.states, seg.ops, as_int_payload(owners)
-                )
+
+        def _post(res):
             if not pol.device_consolidation:
                 flags = np.asarray(res.needs_consolidation)   # (S, T)
                 self.consolidate_sharded(np.nonzero(flags.any(axis=1))[0])
             results.append(res)
+
+        if self.routing != "compact":
+            plan = plan_segments(batches, max_t=max_t)
+            for seg in plan.segments:
+                owners = np.where(
+                    np.asarray(seg.ops.valid),
+                    self.route(np.asarray(seg.ops.ext_id, np.int64)), -1,
+                ).astype(np.int32)                          # (T, B)
+                self.states, res = self._update_segment(
+                    self.states, seg.ops, as_int_payload(owners)
+                )
+                _post(res)
+            return results
+
+        # pack each step once (host, numpy); bc joins the plan key
+        batches = list(batches)
+        packed, positions, owner_rows, bcs = [], [], [], []
+        for batch in batches:
+            own = np.where(
+                np.asarray(batch.valid),
+                self.route(np.asarray(batch.ext_id, np.int64)), -1,
+            ).astype(np.int32)                              # (B,)
+            sub, p, bc = _compact_owner_batch_np(
+                batch, own, self.n_logical
+            )
+            TRACE_COUNTER["segment_pack"] += 1
+            TRACE_SHAPES["segment_pack"].append(tuple(sub.kind.shape))
+            packed.append(sub)
+            positions.append(p)
+            owner_rows.append(own)
+            bcs.append(bc)
+        plan = plan_segments(batches, max_t=max_t, keys=bcs)
+        i = 0
+        for seg in plan.segments:
+            t_bucket, b = seg.ops.kind.shape
+            n = seg.n_ops
+            bc = bcs[i]
+            dim = packed[i].vector.shape[2]
+            # T padding: packed all-masked no-op steps of the segment's bc
+            pad_step, _, _ = _compact_owner_batch_np(
+                noop_update_batch(b, dim),
+                np.full((b,), -1, np.int32),
+                self.n_logical, bucket=bc,
+            ) if t_bucket > n else (None, None, None)
+            steps = packed[i:i + n] + [pad_step] * (t_bucket - n)
+            cops = UpdateBatch(*[
+                jnp.asarray(np.stack(arrs, axis=1)) for arrs in zip(*steps)
+            ])
+            cops = jax.device_put(cops, self._shard_spec)
+            self.states, res = self._update_segment_compact(
+                self.states, cops
+            )
+            # per-lane results back to caller lane order: without this
+            # an ok=False cell of the owner-packed (S, T, Bc) tensor
+            # is not attributable to a stream lane
+            pos = np.full((t_bucket, b), -1, np.int32)
+            pos[:n] = np.stack(positions[i:i + n])
+            owners = np.full((t_bucket, b), -1, np.int32)
+            owners[:n] = np.stack(owner_rows[i:i + n])
+            ok_c = np.asarray(res.ok)
+            slot_c = np.asarray(res.slot)
+            comps_c = np.asarray(res.n_comps)
+            m = pos >= 0
+            t_of = np.broadcast_to(
+                np.arange(pos.shape[0])[:, None], pos.shape
+            )
+            ok = np.zeros(pos.shape, bool)
+            slot = np.full(pos.shape, INVALID, np.int32)
+            comps = np.zeros(pos.shape, comps_c.dtype)
+            ok[m] = ok_c[owners[m], t_of[m], pos[m]]
+            slot[m] = slot_c[owners[m], t_of[m], pos[m]]
+            comps[m] = comps_c[owners[m], t_of[m], pos[m]]
+            _post(res._replace(slot=slot, ok=ok, n_comps=comps))
+            i += n
         return results
 
     def consolidate_sharded(self, shard_ids=None, *, force: bool = False):
@@ -786,12 +844,7 @@ class ShardedIndex:
         power-of-two sub-batches; both modes return identical top-k)."""
         q = np.asarray(queries, np.float32)
         if partition in (None, "replicate"):
-            ids, shards, dists, comps = self._search(
-                self.states, jnp.asarray(q), k=k, l=l
-            )
-            # every shard computed the same global merge; take shard 0's copy
-            return (np.asarray(ids)[0], np.asarray(shards)[0],
-                    np.asarray(dists)[0], int(np.asarray(comps).sum()))
+            return self.search_state(self.states, q, k=k, l=l)
         if partition != "queries":
             raise ValueError(f"unknown search partition {partition!r}")
         n_q = q.shape[0]
@@ -809,3 +862,31 @@ class ShardedIndex:
         )
         return (np.asarray(ids)[:n_q], np.asarray(shards)[:n_q],
                 np.asarray(dists)[:n_q], int(np.asarray(comps).sum()))
+
+    # -- serving (snapshot-isolated reads) ------------------------------------
+
+    def search_state(self, states: IndexState, queries, k=10, l=64):
+        """Replicate-and-merge search against an EXPLICIT stacked state —
+        the snapshot-isolated read path (``repro.serving.ShardedEngine``).
+        ``states`` is any (L, ...) stacked ``IndexState`` pytree laid out
+        like ``self.states`` (e.g. a ``snapshot_states`` clone); the live
+        ``search`` is just this over ``self.states``.  Same compiled
+        program, same return contract as ``search``."""
+        ids, shards, dists, comps = self._search(
+            states, jnp.asarray(np.asarray(queries, np.float32)), k=k, l=l
+        )
+        # every shard computed the same global merge; take shard 0's copy
+        return (np.asarray(ids)[0], np.asarray(shards)[0],
+                np.asarray(dists)[0], int(np.asarray(comps).sum()))
+
+    def snapshot_states(self, states: Optional[IndexState] = None
+                        ) -> IndexState:
+        """A deep, layout-preserving clone of the stacked state (defaults
+        to the live one): fresh buffers on the same shard sharding, safe to
+        search while subsequent updates DONATE the live handle.  This is
+        ``core.api.clone_state`` lifted to the stacked layout — the sharded
+        analogue of ``take_snapshot``."""
+        states = self.states if states is None else states
+        return jax.device_put(
+            jax.tree.map(jnp.copy, states), self._shard_spec
+        )

@@ -2,8 +2,18 @@
 online service — absorbs a continuous insert/delete stream while answering
 batched queries, with no consolidation pauses (the paper's deployment story).
 
-    python -m repro.launch.serve --minutes 0.2 --rate 64 --dim 32
+    python -m repro.launch.serve --ticks 40 --rate 64 --dim 32
     python -m repro.launch.serve --shards 8          # sharded fan-out path
+
+Since the serving rework this launcher drives the ``repro.serving`` front
+door instead of calling the index directly: each tick's queries are
+ADMITTED one at a time and coalesced by the deadline-driven dynamic
+batcher (``--deadline-ms`` / ``--bucket``), updates ride the writer lane,
+and every search runs against the latest PUBLISHED snapshot — never the
+writer's live donated handle.  The summary line surfaces the serving
+percentiles plus the per-phase wall-clock split (search / update /
+publish), so a consolidation stall would show up as update_s growth, not
+as a query latency spike.
 
 Durability (docs/ARCHITECTURE.md "Durability & recovery"): pass
 ``--checkpoint-dir`` to checkpoint the index every ``--checkpoint-every``
@@ -32,6 +42,10 @@ def main(argv=None) -> None:
     ap.add_argument("--mode", default="ip", choices=["ip", "fresh"])
     ap.add_argument("--shards", type=int, default=0,
                     help="run the shard_map fan-out index on N host devices")
+    ap.add_argument("--deadline-ms", type=float, default=5.0,
+                    help="dynamic-batcher admission deadline per query")
+    ap.add_argument("--bucket", type=int, default=32,
+                    help="widest (and target) dispatch bucket, power of two")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="checkpoint the index here and restore on restart")
     ap.add_argument("--checkpoint-every", type=int, default=10,
@@ -51,8 +65,10 @@ def main(argv=None) -> None:
     from ..checkpoint import CheckpointManager
     from ..configs.ann import test_scale
     from ..core import StreamingIndex
+    from ..core.api import delete_batch, insert_batch
     from ..data import VectorStream
     from ..ft.supervisor import SimulatedFailure
+    from ..serving import ServingFront, ServingMetrics, StreamingEngine
 
     n_cap = args.rate * (args.lifetime + 4)
     stream = VectorStream(dim=args.dim, rate=args.rate,
@@ -61,98 +77,111 @@ def main(argv=None) -> None:
            if args.checkpoint_dir else None)
     kill_budget = {args.kill_at: 1} if args.kill_at >= 0 else {}
     max_ext = args.rate * (args.ticks + 1)
-
-    def tick_stream(idx, t):
-        """One deterministic serving tick: absorb the stream step, answer
-        a query batch.  Pure function of (index state, t) — the replay
-        unit of the recovery loop."""
-        ins_ids, vecs, del_ids = stream.step_at(t)
-        # external-id semantics end to end: no host slot bookkeeping
-        idx.insert(ins_ids, vecs)
-        if len(del_ids):
-            idx.delete(del_ids)
-        return stream.queries_at(t, args.queries)
+    cfg = test_scale(args.dim, n_cap)
 
     if args.shards:
         from ..core.distributed import ShardedIndex
+        from ..serving import ShardedEngine
 
         mesh = jax.make_mesh((args.shards,), ("shard",))
-        cfg = test_scale(args.dim, n_cap)
-        t = 0
-        if mgr is not None and mgr.latest() is not None:
-            # elastic: the checkpoint's logical shards lay out over
-            # whatever --shards mesh this process was launched with
+
+        def fresh_index():
+            return ShardedIndex(cfg, mesh, max_external_id=max_ext)
+
+        def restore(mgr):
             idx, t = ShardedIndex.restore(mgr, cfg, mesh)
             print(f"restored sharded checkpoint at tick {t} "
                   f"({idx.n_logical} logical shards on {idx.n_shards} "
                   f"devices)", flush=True)
-        else:
-            idx = ShardedIndex(cfg, mesh, max_external_id=max_ext)
-            if mgr is not None:
-                idx.save(mgr, 0)
-        while t < args.ticks:
-            try:
-                if kill_budget.get(t, 0) > 0:
-                    kill_budget[t] -= 1
-                    raise SimulatedFailure(f"injected kill at tick {t}")
-                q = tick_stream(idx, t)
-                ids, shards, dists, comps = idx.search(q, k=10)
-                if t % 10 == 0:
-                    print(f"tick {t:3d} shards={args.shards} "
-                          f"comps/q={comps/args.queries:.0f}", flush=True)
-                t += 1
-                if mgr is not None and t % args.checkpoint_every == 0:
-                    idx.save(mgr, t)
-            except SimulatedFailure as e:
-                if mgr is None:
-                    raise
-                idx, t = ShardedIndex.restore(mgr, cfg, mesh)
-                print(f"crash ({e}); restored tick {t}, replaying",
-                      flush=True)
-        print("sharded serving done")
-        return
+            return idx, t
 
-    cfg = test_scale(args.dim, n_cap)
+        def make_engine(idx):
+            return ShardedEngine(idx)
+    else:
+        def fresh_index():
+            return StreamingIndex(cfg, mode=args.mode,
+                                  max_external_id=max_ext)
+
+        def restore(mgr):
+            idx, t = StreamingIndex.restore(mgr, cfg)
+            print(f"restored checkpoint at tick {t}", flush=True)
+            return idx, t
+
+        def make_engine(idx):
+            return StreamingEngine(idx)
+
+    # one metrics object across crash/restore cycles: the summary reflects
+    # everything this PROCESS actually served, replayed ticks included
+    metrics = ServingMetrics()
+
+    def make_front(idx):
+        return ServingFront(
+            make_engine(idx),
+            deadline_s=args.deadline_ms * 1e-3,
+            max_bucket=args.bucket,
+            k=10,
+            metrics=metrics,
+        )
+
     t = 0
     if mgr is not None and mgr.latest() is not None:
-        idx, t = StreamingIndex.restore(mgr, cfg)
-        print(f"restored checkpoint at tick {t}", flush=True)
+        idx, t = restore(mgr)
     else:
-        idx = StreamingIndex(cfg, mode=args.mode, max_external_id=max_ext)
+        idx = fresh_index()
         if mgr is not None:
             idx.save(mgr, 0)
-    lat = []
+    front = make_front(idx)
+
+    wall0 = time.perf_counter()
     while t < args.ticks:
         try:
             if kill_budget.get(t, 0) > 0:
                 kill_budget[t] -= 1
                 raise SimulatedFailure(f"injected kill at tick {t}")
-            q = tick_stream(idx, t)
-            t0 = time.perf_counter()
-            idx.search(q, k=10)
-            lat.append((time.perf_counter() - t0) / args.queries)
-            if t % 10 == 0:
-                r = idx.recall(q, k=10)
-                print(
-                    f"tick {t:3d} active={idx.n_active:6d} recall@10={r:.3f} "
-                    f"query={lat[-1]*1e3:.2f}ms "
-                    f"consolidations={idx.counters.n_consolidations}",
-                    flush=True,
+            # writer lane: this tick's stream step as admitted updates
+            ins_ids, vecs, del_ids = stream.step_at(t)
+            front.submit_update(
+                insert_batch(ins_ids, vecs), time.perf_counter()
+            )
+            if len(del_ids):
+                front.submit_update(
+                    delete_batch(del_ids, args.dim), time.perf_counter()
                 )
+            # reader lane: admit queries one at a time; full buckets leave
+            # on admission, the partial tail leaves at its deadline
+            q = stream.queries_at(t, args.queries)
+            for v in q:
+                front.submit_query(v, time.perf_counter())
+                front.pump(time.perf_counter())
+            nd = front.next_event_time()
+            if nd is not None:
+                front.pump(nd)      # flush the tick's deadline tail
+            if t % 10 == 0:
+                line = f"tick {t:3d} {front.metrics.log_line()}"
+                if not args.shards:
+                    line += (f" recall@10={idx.recall(q, k=10):.3f}"
+                             f" active={idx.n_active}")
+                print(line, flush=True)
             t += 1
             if mgr is not None and t % args.checkpoint_every == 0:
                 idx.save(mgr, t)
         except SimulatedFailure as e:
             if mgr is None:
                 raise
-            idx, t = StreamingIndex.restore(mgr, cfg)
+            idx, t = restore(mgr)
+            front = make_front(idx)
             print(f"crash ({e}); restored tick {t}, replaying", flush=True)
-    lat_sorted = sorted(lat)
+
+    s = metrics.stats(horizon_s=time.perf_counter() - wall0)
+    label = f"shards={args.shards}" if args.shards else f"mode={args.mode}"
     print(
-        f"served {args.ticks} ticks mode={args.mode}: "
-        f"p50={lat_sorted[len(lat)//2]*1e3:.2f}ms "
-        f"p99={lat_sorted[int(len(lat)*0.99)]*1e3:.2f}ms "
-        f"(no consolidation latency spikes = the paper's claim)"
+        f"served {args.ticks} ticks {label}: "
+        f"q={s['n_queries']} p50={s['p50_ms']:.2f}ms "
+        f"p99={s['p99_ms']:.2f}ms fill={s['batch_fill']:.2f} | "
+        f"phase wall-clock: search={s['search_s']:.2f}s "
+        f"update={s['update_s']:.2f}s publish={s['publish_s']:.2f}s "
+        f"(snapshot reads: no consolidation latency spikes = "
+        f"the paper's claim)"
     )
 
 

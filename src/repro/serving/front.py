@@ -1,0 +1,315 @@
+"""The async serving front door: admission queue -> deadline batcher ->
+snapshot-isolated search, over a live update stream.
+
+This is the paper's deployment claim made executable: because updates are
+in-place (no stop-the-world consolidation) and the read side runs against
+published snapshots, queries NEVER wait on an in-flight update program.
+The moving parts:
+
+  * a ``DynamicBatcher`` (batcher.py) coalesces open-loop query arrivals
+    into the engine's existing power-of-two compile buckets under a
+    latency deadline — dispatch at bucket-full or deadline expiry;
+  * a ``SnapshotStore`` (snapshot.py) double-buffers sequence-numbered
+    read states: the writer keeps donating its live handle to the
+    compiled update stream, readers search the last published clone;
+  * a ``ServingMetrics`` (metrics.py) object books every request's
+    enqueue/dispatch/complete timestamps, queue depth, batch fill and the
+    per-phase wall-clock split.
+
+**Two-lane timeline.**  The front door is single-threaded Python driving
+compiled device programs, so real reader/writer overlap is modelled
+rather than executed: the READER lane serves search dispatches, the
+WRITER lane serves updates and snapshot publishes, and each lane's
+virtual free-time advances by the MEASURED wall-clock service time of the
+real compiled call.  Under snapshot isolation the lanes are independent —
+a query dispatched while an update is in flight starts immediately on the
+reader lane (that is precisely what the double-buffered snapshot buys);
+``serialize_updates=True`` collapses both onto one lane, reproducing the
+old single-threaded tick loop where search queues behind ``apply`` — the
+contrast benchmarks/serve_bench.py quantifies.  On a real deployment the
+two lanes are two device streams (or a searcher/updater core split, as in
+FreshDiskANN); the service times here are the real compiled programs'.
+
+Determinism: the front door never reads a clock — every entry point takes
+``now`` explicitly — and batch composition depends only on the arrival
+trace and the deadline/bucket knobs, never on service times.  With a
+``service_model`` injected (tests), completion times are deterministic
+too, so a fixed trace replays to identical dispatch groups.
+
+Engines adapt the two index front doors behind one surface:
+``StreamingEngine`` (single ``IndexState`` through ``core/api.py``) and
+``ShardedEngine`` (stacked ``ShardedIndex`` states through the same
+``shard_map`` search program, against a snapshot of the stack).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, List, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core.api import SnapshotHandle, search as search_index, take_snapshot
+from ..core.search_batched import next_bucket
+from ..core.types import UpdateBatch, noop_update_batch
+from .batcher import Dispatch, DynamicBatcher, group_vectors
+from .metrics import ServingMetrics
+from .snapshot import SnapshotStore
+
+
+class StreamingEngine:
+    """Serve adapter over a ``StreamingIndex``: the writer side routes
+    ``UpdateBatch``es through the donated ``apply`` front door (plus the
+    policy's consolidation trigger), the read side searches any
+    ``IndexState`` snapshot via ``core.api.search``."""
+
+    def __init__(self, index):
+        self.idx = index
+        self.cfg = index.cfg
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.dim
+
+    def live_state(self):
+        return self.idx.istate
+
+    def clone(self, state, seq: int) -> SnapshotHandle:
+        return take_snapshot(state, seq)
+
+    def apply_update(self, batch: UpdateBatch) -> int:
+        """Apply one padded batch to the live (donated) writer handle;
+        returns the number of lanes that applied."""
+        res = self.idx._apply(batch, sequential=False)
+        self.idx.maybe_consolidate()
+        return int(np.asarray(res.ok).sum())
+
+    def search(self, state, queries: np.ndarray, k: int, l: Optional[int]):
+        ext, dists, _ = search_index(
+            state, self.cfg, jnp.asarray(queries, jnp.float32),
+            k=k, l=l or self.cfg.l_search,
+        )
+        return np.asarray(ext), np.asarray(dists)
+
+
+class ShardedEngine:
+    """Serve adapter over a ``ShardedIndex``: updates route to owner
+    shards through the index's compact/replicate update programs; reads
+    run the replicate-and-merge search program against a SNAPSHOT of the
+    stacked states (``ShardedIndex.search_state``), so the sharded writer
+    donates freely too."""
+
+    def __init__(self, index):
+        self.idx = index
+        self.cfg = index.cfg
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.dim
+
+    def live_state(self):
+        return self.idx.states
+
+    def clone(self, states, seq: int) -> SnapshotHandle:
+        return SnapshotHandle(
+            seq=int(seq), state=self.idx.snapshot_states(states)
+        )
+
+    def apply_update(self, batch: UpdateBatch) -> int:
+        valid = np.asarray(batch.valid)
+        owners = np.where(
+            valid, self.idx.route(np.asarray(batch.ext_id, np.int64)), -1
+        ).astype(np.int32)
+        ok, _ = self.idx._apply_update(batch, owners)
+        return int(np.asarray(ok).sum())
+
+    def search(self, states, queries: np.ndarray, k: int, l: Optional[int]):
+        ids, _, dists, _ = self.idx.search_state(
+            states, queries, k=k, l=l or self.cfg.l_search
+        )
+        return np.asarray(ids), np.asarray(dists)
+
+
+class ServingFront:
+    """Admission queue + dynamic batcher + snapshot swap for one engine.
+
+    All entry points take ``now`` (caller's clock, seconds).  Wall-clock
+    callers pass ``time.perf_counter()``; the open-loop benchmark and the
+    deterministic tests pass virtual event times.
+
+    ``publish_every``: update batches between snapshot publishes (1 =
+    read-your-writes after every batch; larger amortizes the clone).
+    ``serialize_updates``: collapse the reader/writer lanes into one —
+    the no-snapshot baseline where search queues behind updates.
+    ``service_model``: optional ``(kind, bucket) -> seconds`` override for
+    the TIMELINE accounting ("search"/"update"/"publish" kinds); the real
+    compiled calls still run, but completion times become a deterministic
+    function of the trace (replay tests).
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        deadline_s: float = 0.005,
+        max_bucket: int = 64,
+        k: int = 10,
+        l: Optional[int] = None,
+        publish_every: int = 1,
+        serialize_updates: bool = False,
+        service_model: Optional[Callable[[str, int], float]] = None,
+        metrics: Optional[ServingMetrics] = None,
+    ):
+        self.engine = engine
+        self.k = int(k)
+        self.l = l
+        self.publish_every = max(1, int(publish_every))
+        self.serialize_updates = bool(serialize_updates)
+        self.service_model = service_model
+        self.batcher = DynamicBatcher(
+            deadline_s=deadline_s, max_bucket=max_bucket
+        )
+        self.store = SnapshotStore(engine.live_state(), clone=engine.clone)
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+        self._updates: deque = deque()      # (arrival_t, UpdateBatch)
+        self._since_publish = 0
+        self._reader_free = 0.0
+        self._writer_free = 0.0
+        self.completed: List[Dispatch] = []
+
+    # -- admission -----------------------------------------------------------
+
+    def submit_query(self, vector, now: float, *, k: Optional[int] = None):
+        """Admit one query; returns its ``QueryRequest`` handle (results
+        land on it when the batch it rides dispatches)."""
+        return self.batcher.submit(vector, now, k=k or self.k)
+
+    def submit_update(self, batch: UpdateBatch, now: float) -> None:
+        """Admit one ``UpdateBatch`` for the writer lane."""
+        self._updates.append((float(now), batch))
+
+    def next_event_time(self) -> Optional[float]:
+        """When the front door next NEEDS a ``pump`` with no new arrival:
+        the oldest pending query's deadline (None if queue empty)."""
+        return self.batcher.next_deadline()
+
+    # -- the pump ------------------------------------------------------------
+
+    def _service(self, kind: str, bucket: int, measured: float) -> float:
+        if self.service_model is not None:
+            return float(self.service_model(kind, bucket))
+        return measured
+
+    def _lane_start(self, now: float, lane_free: float) -> float:
+        return max(float(now), lane_free)
+
+    def _apply_updates(self, now: float) -> None:
+        while self._updates and self._updates[0][0] <= now:
+            arrival, batch = self._updates.popleft()
+            t0 = time.perf_counter()
+            n = self.engine.apply_update(batch)
+            dt = self._service(
+                "update", batch.kind.shape[0], time.perf_counter() - t0
+            )
+            start = self._lane_start(arrival, self._writer_free)
+            self._writer_free = start + dt
+            if self.serialize_updates:
+                self._reader_free = self._writer_free
+            self.metrics.record_update(n, dt)
+            self._since_publish += 1
+            if self._since_publish >= self.publish_every:
+                self.publish(now)
+
+    def publish(self, now: float) -> int:
+        """Publish the writer's current state as the next snapshot (the
+        clone runs on the writer lane).  Returns the new seq."""
+        t0 = time.perf_counter()
+        snap = self.store.publish(self.engine.live_state())
+        dt = self._service("publish", 0, time.perf_counter() - t0)
+        self._writer_free = self._lane_start(now, self._writer_free) + dt
+        if self.serialize_updates:
+            self._reader_free = self._writer_free
+        self.metrics.record_publish(dt)
+        self._since_publish = 0
+        return snap.seq
+
+    def _run_dispatch(self, d: Dispatch, now: float) -> Dispatch:
+        q = group_vectors(d, self.engine.dim)
+        snap = self.store.acquire()
+        t0 = time.perf_counter()
+        ext, dists = self.engine.search(snap.state, q, self.k, self.l)
+        measured = time.perf_counter() - t0
+        self.store.release(snap)
+        dt = self._service("search", d.bucket, measured)
+        lane_free = (
+            max(self._reader_free, self._writer_free)
+            if self.serialize_updates else self._reader_free
+        )
+        start = self._lane_start(now, lane_free)
+        complete = start + dt
+        self._reader_free = complete
+        if self.serialize_updates:
+            self._writer_free = complete
+        for i, req in enumerate(d.requests):
+            req.dispatch_t = d.formed_t
+            req.complete_t = complete
+            req.snapshot_seq = snap.seq
+            req.ext_ids = ext[i, : req.k]
+            req.dists = dists[i, : req.k]
+        self.metrics.record_dispatch(d, dt, len(self.batcher))
+        self.completed.append(d)
+        return d
+
+    def pump(self, now: float) -> List[Dispatch]:
+        """Advance the front door to ``now``: apply due updates (writer
+        lane, publishing on cadence), then dispatch every due batch
+        (reader lane).  Returns the dispatches completed this pump."""
+        self._apply_updates(now)
+        out = []
+        while True:
+            d = self.batcher.take(now)
+            if d is None:
+                break
+            out.append(self._run_dispatch(d, now))
+        return out
+
+    def drain(self, now: float) -> List[Dispatch]:
+        """Flush everything: apply all admitted updates (regardless of
+        arrival time) and force-dispatch all pending queries."""
+        if self._updates:
+            last = self._updates[-1][0]
+            self._apply_updates(max(now, last))
+        out = []
+        for d in self.batcher.drain(now):
+            out.append(self._run_dispatch(d, now))
+        return out
+
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self, *, update_buckets=()) -> None:
+        """Compile every search bucket the batcher can emit (1, 2, 4, ...,
+        ``max_bucket``) against the current snapshot, plus any update-lane
+        buckets, so first-dispatch latencies measure execution rather than
+        tracing.  No timeline or metrics side effects."""
+        snap = self.store.acquire()
+        b = 1
+        while b <= self.batcher.max_bucket:
+            self.engine.search(
+                snap.state, np.zeros((b, self.engine.dim), np.float32),
+                self.k, self.l,
+            )
+            b *= 2
+        self.store.release(snap)
+        for ub in update_buckets:
+            self.engine.apply_update(
+                noop_update_batch(next_bucket(ub), self.engine.dim)
+            )
+
+
+__all__ = [
+    "ServingFront",
+    "ShardedEngine",
+    "StreamingEngine",
+]

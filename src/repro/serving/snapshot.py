@@ -1,0 +1,110 @@
+"""Snapshot-isolated read states: double-buffered, sequence-numbered swap.
+
+The update front doors DONATE their state (``core/api.py``): one in-flight
+``apply``/``apply_segment`` rewrites the multi-MB graph buffers in place.
+A serving system that searched the writer's live handle would therefore
+either serialize queries behind every update (the old ``launch/serve.py``
+tick loop) or read torn state.  The ``SnapshotStore`` decouples the two
+sides with the classic double-buffer protocol:
+
+  * the WRITER owns the live handle and keeps donating it to the compiled
+    update stream;
+  * after a batch of updates it PUBLISHES: ``core.api.take_snapshot``
+    clones the live state into the currently-INACTIVE read slot, the
+    active-slot pointer flips, and the publication sequence number bumps —
+    one atomic swap from the readers' point of view;
+  * READERS ``acquire()`` the active slot (a ``SnapshotHandle`` carrying
+    its seq) and ``release()`` it when their search completes.  Because
+    publish only ever writes the inactive slot, a reader holding snapshot
+    N keeps bit-stable buffers while the writer races ahead — it can
+    overlap at most ONE publish; holding a handle across two publishes is
+    a protocol violation the store rejects loudly rather than tearing the
+    reader's buffers.
+
+Visibility contract (pinned by ``tests/test_serving.py`` for both update
+policies): a search against snapshot N observes exactly the updates
+applied before publish N and NOTHING of any in-flight segment N+1
+(isolation), and after publish N+1 a fresh ``acquire`` observes all of
+segment N+1 (read-your-writes).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..core.api import SnapshotHandle, take_snapshot
+
+
+class SnapshotStore:
+    """Double-buffered published read states for one writer.
+
+    ``state0`` seeds the first published snapshot (seq 0).  ``clone``
+    overrides the deep-copy used at publish time (``take_snapshot`` by
+    default) — the sharded engine passes a device_put-preserving clone.
+    """
+
+    def __init__(self, state0, *, clone: Optional[Callable] = None):
+        self._clone = clone or (lambda st, seq: take_snapshot(st, seq))
+        self._slots: list = [self._clone(state0, 0), None]
+        self._active = 0
+        self._inflight = [0, 0]     # acquired-and-unreleased readers per slot
+        self.n_publishes = 0
+        self.n_acquires = 0
+
+    @property
+    def seq(self) -> int:
+        """Sequence number of the currently-published snapshot."""
+        return self._slots[self._active].seq
+
+    @property
+    def active_slot(self) -> int:
+        """Which of the two buffers is published (protocol introspection —
+        tests pin the publish/flip alternation)."""
+        return self._active
+
+    def acquire(self) -> SnapshotHandle:
+        """The current published snapshot.  Pair with ``release`` when the
+        read completes; a handle may be held across at most one publish."""
+        self._inflight[self._active] += 1
+        self.n_acquires += 1
+        return self._slots[self._active]
+
+    def release(self, handle: SnapshotHandle) -> None:
+        """Return a handle obtained from ``acquire``."""
+        for slot in (0, 1):
+            snap = self._slots[slot]
+            if snap is not None and snap.seq == handle.seq:
+                if self._inflight[slot] <= 0:
+                    raise RuntimeError(
+                        f"release of snapshot seq={handle.seq} with no "
+                        f"reader in flight"
+                    )
+                self._inflight[slot] -= 1
+                return
+        raise RuntimeError(
+            f"release of snapshot seq={handle.seq}, which is no longer "
+            f"buffered (held across two publishes?)"
+        )
+
+    def publish(self, state) -> SnapshotHandle:
+        """Clone ``state`` into the inactive slot, flip, bump seq.
+
+        Readers still holding the PREVIOUS snapshot are unaffected (their
+        slot is not touched); readers two publishes behind would have
+        their buffers overwritten, so the store refuses to publish over a
+        slot with readers in flight."""
+        target = 1 - self._active
+        if self._inflight[target]:
+            raise RuntimeError(
+                f"publish would overwrite snapshot "
+                f"seq={self._slots[target].seq} with "
+                f"{self._inflight[target]} reader(s) still in flight "
+                f"(a snapshot may be held across at most one publish)"
+            )
+        snap = self._clone(state, self.seq + 1)
+        self._slots[target] = snap
+        self._active = target
+        self.n_publishes += 1
+        return snap
+
+
+__all__ = ["SnapshotStore"]

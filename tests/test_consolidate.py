@@ -112,3 +112,51 @@ def test_device_sweep_cond_is_narrow_for_ip():
     idle = device_sweep(state, CFG, pol, jnp.bool_(False))
     for a, b in zip(jax.tree.leaves(idle), jax.tree.leaves(state)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_consolidate_stacked_donated_scatter_bit_parity():
+    """The jitted donated per-shard scatter (``_scatter_shard``) must be
+    bit-identical to the un-jitted full-leaf ``.at[s].set`` rebuild it
+    replaced — for a multi-shard stack with a mix of consolidated and
+    untouched shards (the untouched shard's contents must survive the
+    donation untouched)."""
+    import jax
+
+    from repro.core.consolidate import consolidate_stacked
+
+    # two DIFFERENT graphs with pending quarantined deletions
+    idx_a, *_ = _build(seed=0)
+    idx_a.delete(np.arange(0, 40))
+    idx_b, *_ = _build(seed=1)
+    idx_b.delete(np.arange(50, 70))
+    stack = jax.tree.map(
+        lambda a, b: jnp.stack([a, b]), idx_a.state, idx_b.state
+    )
+    ref_in = jax.tree.map(jnp.copy, stack)      # consolidate_stacked donates
+
+    def old_path(graphs, shard_ids):
+        for s in shard_ids:
+            g = jax.tree.map(lambda x: x[s], graphs)
+            g = light_consolidate(g, CFG)
+            graphs = jax.tree.map(
+                lambda full, new: full.at[s].set(new), graphs, g
+            )
+        return graphs
+
+    # consolidate shard 1 only: shard 0 must come through bit-identical
+    new = consolidate_stacked(stack, CFG, light_consolidate, [1])
+    ref = old_path(ref_in, [1])
+    for x, y in zip(jax.tree.leaves(new), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and the consolidated shard really consolidated
+    assert not np.asarray(new.quarantine[1]).any()
+    assert np.asarray(new.quarantine[0]).sum() == 40
+
+    # both shards, same parity (exercises the traced-s program reuse)
+    stack2 = jax.tree.map(
+        lambda a, b: jnp.stack([a, b]), idx_a.state, idx_b.state
+    )
+    ref2 = old_path(jax.tree.map(jnp.copy, stack2), [0, 1])
+    new2 = consolidate_stacked(stack2, CFG, light_consolidate, [0, 1])
+    for x, y in zip(jax.tree.leaves(new2), jax.tree.leaves(ref2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

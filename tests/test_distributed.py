@@ -489,3 +489,79 @@ def test_merge_topk_incremental_matches_flat():
         np.asarray(best_d), np.take_along_axis(d, order, axis=1),
         rtol=1e-6,
     )
+
+
+def test_update_stream_owner_aware_planning_single_device():
+    """Owner-aware segment planning (compact routing): every stream step
+    is packed exactly ONCE at plan time, its per-shard compact bucket is
+    folded into the plan key, and consecutive segments with the same
+    (T, Bc) share one compiled program — while a step whose owner
+    distribution changes the bucket starts a new segment instead of
+    silently inflating its neighbours' scan width."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import jax
+
+    from repro.configs.ann import test_scale as ann_cfg
+    from repro.core import insert_batch, next_bucket
+    from repro.core.distributed import (
+        ShardedIndex,
+        TRACE_COUNTER,
+        TRACE_SHAPES,
+    )
+
+    cfg = ann_cfg(8, n_cap=512)
+    mesh = jax.make_mesh((1,), ("shard",))
+    idx = ShardedIndex(cfg, mesh, n_logical=2, max_external_id=4096)
+    rng = np.random.default_rng(0)
+
+    pool = np.arange(4096)
+    own = idx.route(pool)
+    per = [pool[own == s] for s in range(2)]
+
+    def balanced(i, b=16):
+        # every B=16 step owns b/2 lanes per logical shard -> bc = 8
+        half = b // 2
+        return np.concatenate([p[i * half:(i + 1) * half] for p in per])
+
+    def data(ids):
+        return rng.standard_normal((len(ids), 8)).astype(np.float32)
+
+    # (1) 8 identical balanced steps under max_t=4: two T=4 segments with
+    # the SAME (L, T, Bc) shape -> 8 packs, ONE compile for both segments
+    t0p = TRACE_COUNTER["segment_pack"]
+    t0c = TRACE_COUNTER["segment_compact"]
+    ids8 = [balanced(i) for i in range(8)]
+    res = idx.update_stream(
+        [insert_batch(e, data(e)) for e in ids8], max_t=4
+    )
+    assert len(res) == 2
+    assert TRACE_COUNTER["segment_pack"] - t0p == 8
+    assert TRACE_COUNTER["segment_compact"] - t0c == 1, (
+        "same-key consecutive segments must reuse one compiled program")
+    packed_widths = {s[-1] for s in TRACE_SHAPES["segment_pack"][-8:]}
+    assert packed_widths == {next_bucket(8)}        # bc = B/L, not B
+    for r in res:
+        ok = np.asarray(r.ok)                       # (T, B) caller order
+        assert ok.shape == (4, 16) and ok.all()
+
+    # (2) a skewed step (all lanes owned by logical shard 0 -> bc = 16)
+    # splits the plan: balanced | skewed | balanced -> 3 segments, and
+    # only the new (T, Bc) shapes compile (the trailing balanced segment
+    # reuses the (1, 8) program of the leading one)
+    skew = [per[0][200 + i * 16: 216 + i * 16] for i in range(2)]
+    t1p = TRACE_COUNTER["segment_pack"]
+    t1c = TRACE_COUNTER["segment_compact"]
+    mixed = [balanced(9), skew[0], skew[1], balanced(10)]
+    res2 = idx.update_stream(
+        [insert_batch(e, data(e)) for e in mixed], max_t=4
+    )
+    assert len(res2) == 3
+    assert TRACE_COUNTER["segment_pack"] - t1p == 4
+    assert TRACE_COUNTER["segment_compact"] - t1c == 2, (
+        "expected exactly the (1, 8)-reuse + two new (T, Bc) programs")
+    for r in res2:
+        ok = np.asarray(r.ok)
+        assert ok[:, :16].all()
+    # per-shard scan width never exceeded next_bucket(max owned lanes)
+    assert {s[-1] for s in TRACE_SHAPES["segment_compact"][-2:]} <= {8, 16}

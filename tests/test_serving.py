@@ -1,0 +1,374 @@
+"""The async serving front door (repro/serving/).
+
+Pins the three contracts the subsystem exists for:
+
+  * **batcher determinism** — the admission queue is a pure state machine
+    over (arrival trace, deadline, bucket): dispatch at bucket-full or
+    oldest-deadline expiry, padding onto the existing power-of-two compile
+    buckets, and a fixed trace replays to IDENTICAL dispatch groups;
+  * **snapshot isolation** — queries served against published snapshot N
+    return bit-identical answers while the writer applies (and even
+    consolidates) segment N+1 on its donated live handle, for BOTH update
+    policies; after publish, a fresh acquire observes all of N+1
+    (read-your-writes).  The double-buffer protocol itself (seq bumps,
+    slot alternation, refusal to overwrite a held slot) is pinned on the
+    store directly;
+  * **one front door for both engines** — the same ServingFront drives a
+    ``StreamingIndex`` and a ``ShardedIndex`` (via ``search_state`` over a
+    ``snapshot_states`` clone), with the same isolation semantics.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.configs.ann import test_scale as ann_cfg           # noqa: E402
+from repro.core import (                                      # noqa: E402
+    StreamingIndex,
+    delete_batch,
+    insert_batch,
+)
+from repro.serving import (                                   # noqa: E402
+    DynamicBatcher,
+    ServingFront,
+    SnapshotStore,
+    StreamingEngine,
+    group_vectors,
+    percentile,
+)
+
+
+# ---------------------------------------------------------------------------
+# DynamicBatcher: the deterministic admission state machine
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_dispatches_full_bucket_immediately():
+    b = DynamicBatcher(deadline_s=10.0, max_bucket=4)
+    for i in range(4):
+        b.submit(np.zeros(8), now=float(i))
+        if i < 3:
+            assert b.take(float(i)) is None     # deadline far, not full
+    d = b.take(3.0)
+    assert d is not None and d.reason == "full"
+    assert d.bucket == 4 and len(d.requests) == 4
+    assert [r.req_id for r in d.requests] == [0, 1, 2, 3]   # admission order
+    assert len(b) == 0
+
+
+def test_batcher_deadline_flushes_partial_padded_to_bucket():
+    b = DynamicBatcher(deadline_s=0.005, max_bucket=8)
+    b.submit(np.zeros(4), now=0.0)
+    b.submit(np.ones(4), now=0.001)
+    assert not b.ready(0.004)
+    assert b.take(0.004) is None                # oldest deadline is 0.005
+    assert b.next_deadline() == pytest.approx(0.005)
+    assert b.ready(0.005)
+    d = b.take(0.006)
+    assert d.reason == "deadline"
+    assert len(d.requests) == 2 and d.bucket == 2   # next_bucket(2), not 8
+    assert d.fill == pytest.approx(1.0)
+    q = group_vectors(d, 4)
+    assert q.shape == (2, 4)
+    np.testing.assert_array_equal(q[1], np.ones(4, np.float32))
+
+
+def test_batcher_validates_bucket_and_never_exceeds_max():
+    with pytest.raises(ValueError):
+        DynamicBatcher(max_bucket=6)            # not a power of two
+    b = DynamicBatcher(deadline_s=0.0, max_bucket=2)
+    for i in range(5):
+        b.submit(np.zeros(2), now=0.0)
+    groups = b.drain(1.0)
+    assert [len(g.requests) for g in groups] == [2, 2, 1]
+    assert all(g.bucket <= 2 for g in groups)
+
+
+def test_batcher_fixed_trace_replays_to_identical_groups():
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(0.002, size=40))
+
+    def run():
+        b = DynamicBatcher(deadline_s=0.005, max_bucket=8)
+        out = []
+        for t in arrivals:
+            while b.next_deadline() is not None and b.next_deadline() <= t:
+                d = b.take(b.next_deadline())
+                if d is None:
+                    break
+                out.append(d)
+            b.submit(np.zeros(4), now=float(t))
+            d = b.take(float(t))
+            if d is not None:
+                out.append(d)
+        out.extend(b.drain(float(arrivals[-1]) + 1.0))
+        return [
+            ([r.req_id for r in d.requests], d.bucket, d.reason, d.formed_t)
+            for d in out
+        ]
+
+    a, b = run(), run()
+    assert a == b
+    assert sum(len(g[0]) for g in a) == 40      # every request served once
+
+
+# ---------------------------------------------------------------------------
+# SnapshotStore: the double-buffer swap protocol
+# ---------------------------------------------------------------------------
+
+
+def _counting_store():
+    return SnapshotStore({"v": np.arange(4)},
+                         clone=lambda st, seq: _Handle(seq, dict(st)))
+
+
+class _Handle:
+    def __init__(self, seq, state):
+        self.seq, self.state = seq, state
+
+
+def test_snapshot_store_seq_and_slot_alternation():
+    st = _counting_store()
+    assert st.seq == 0 and st.active_slot == 0
+    st.publish({"v": np.arange(4) + 1})
+    assert st.seq == 1 and st.active_slot == 1
+    st.publish({"v": np.arange(4) + 2})
+    assert st.seq == 2 and st.active_slot == 0      # strict double-buffer
+    assert st.n_publishes == 2
+
+
+def test_snapshot_store_held_reader_survives_one_publish_only():
+    st = _counting_store()
+    h = st.acquire()
+    assert h.seq == 0
+    st.publish({"v": np.zeros(4)})                  # writes the OTHER slot
+    assert h.state["v"][0] == 0                     # reader untouched
+    # a second publish would overwrite the held slot: refused loudly
+    with pytest.raises(RuntimeError, match="in flight"):
+        st.publish({"v": np.zeros(4)})
+    st.release(h)
+    st.publish({"v": np.zeros(4)})                  # now allowed
+    assert st.seq == 2
+
+
+def test_snapshot_store_release_validation():
+    st = _counting_store()
+    with pytest.raises(RuntimeError, match="no reader"):
+        st.release(_Handle(0, {}))                  # never acquired
+    with pytest.raises(RuntimeError, match="no longer buffered"):
+        st.release(_Handle(99, {}))
+
+
+def test_percentile_contract():
+    assert np.isnan(percentile([], 99))
+    assert percentile([1.0, 2.0, 3.0], 50) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot-isolated search under a live update stream (both policies)
+# ---------------------------------------------------------------------------
+
+
+def _bootstrap(mode: str, dim: int = 8, n0: int = 96):
+    cfg = ann_cfg(dim, 256)
+    idx = StreamingIndex(cfg, mode=mode, max_external_id=2048)
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((n0, dim)).astype(np.float32)
+    idx.insert(np.arange(n0), data)
+    return idx, data, rng
+
+
+@pytest.mark.parametrize("mode", ["ip", "fresh"])
+def test_snapshot_isolation_and_read_your_writes(mode):
+    idx, data, rng = _bootstrap(mode)
+    dim = data.shape[1]
+    # publish_every beyond the update count: the snapshot stays at seq 0
+    # while the writer races ahead, until we publish explicitly
+    front = ServingFront(StreamingEngine(idx), deadline_s=0.0,
+                         max_bucket=8, k=5, publish_every=10**9)
+
+    queries = data[:8] + 0.01   # near existing points -> stable top-k
+    def serve(now):
+        reqs = [front.submit_query(q, now) for q in queries]
+        front.pump(now + 1.0)   # deadline 0: everything flushes
+        return reqs
+
+    before = serve(0.0)
+    assert all(r.snapshot_seq == 0 for r in before)
+
+    # writer: segment N+1 = inserts AT the query locations (would be
+    # top-1 if visible) plus deletes of the current top-1 ids
+    top1 = np.asarray([r.ext_ids[0] for r in before])
+    new_ids = 1000 + np.arange(8)
+    front.submit_update(insert_batch(new_ids, queries), 1.0)
+    front.submit_update(delete_batch(np.unique(top1), dim), 1.0)
+    front.pump(2.0)             # updates applied to the LIVE handle
+    assert front.metrics.n_updates == 2
+
+    # isolation: snapshot-0 answers are bit-identical — no partial effect
+    # of the in-flight segment (not the inserts, not the deletes, not a
+    # consolidation pass) is visible to readers
+    after = serve(3.0)
+    assert all(r.snapshot_seq == 0 for r in after)
+    for r0, r1 in zip(before, after):
+        np.testing.assert_array_equal(r0.ext_ids, r1.ext_ids)
+        np.testing.assert_array_equal(r0.dists, r1.dists)
+
+    # read-your-writes: one publish, and a fresh acquire sees ALL of it
+    front.publish(4.0)
+    final = serve(5.0)
+    assert all(r.snapshot_seq == 1 for r in final)
+    for i, r in enumerate(final):
+        assert r.ext_ids[0] == new_ids[i], (
+            f"inserted point invisible after publish: {r.ext_ids}")
+        assert not set(np.unique(top1).tolist()) & set(r.ext_ids.tolist()), (
+            "deleted id still served after publish")
+
+
+@pytest.mark.parametrize("mode", ["ip", "fresh"])
+def test_front_end_to_end_under_interleaved_load(mode):
+    """Dispatch-level integration: full buckets leave on admission,
+    deadline tails flush, updates publish on cadence, every request gets
+    stamped results from a consistent snapshot."""
+    idx, data, rng = _bootstrap(mode)
+    front = ServingFront(StreamingEngine(idx), deadline_s=0.004,
+                         max_bucket=4, k=3, publish_every=1)
+    t = 0.0
+    for i in range(10):
+        front.submit_query(data[i] + 0.01, t)
+        if i % 3 == 0:
+            front.submit_update(
+                insert_batch([500 + i], data[i:i + 1]), t)
+        front.pump(t)
+        t += 0.001
+    front.drain(t)
+    m = front.metrics
+    assert m.n_queries == 10
+    reasons = [d.reason for d in front.completed]
+    assert "full" in reasons                    # bucket-full fired
+    assert set(reasons) <= {"full", "deadline", "drain"}
+    assert m.n_publishes == front.store.n_publishes > 0
+    for d in front.completed:
+        for r in d.requests:
+            assert r.complete_t >= r.dispatch_t >= r.arrival_t
+            assert r.snapshot_seq >= 0
+            assert r.ext_ids is not None and len(r.ext_ids) == 3
+    s = m.stats(horizon_s=t)
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+    assert 0 < s["batch_fill"] <= 1
+    assert "p50=" in m.log_line()
+
+
+def test_front_fixed_trace_with_service_model_is_deterministic():
+    """With a service model injected, the ENTIRE serving timeline —
+    dispatch groups, snapshot seqs, completion times, metrics — is a pure
+    function of the arrival trace."""
+    rng = np.random.default_rng(3)
+    arrivals = np.cumsum(rng.exponential(0.001, size=24))
+    vectors = rng.standard_normal((24, 8)).astype(np.float32)
+    model = {"search": 0.002, "update": 0.004, "publish": 0.001}
+
+    def run():
+        idx, data, _ = _bootstrap("ip")
+        front = ServingFront(
+            StreamingEngine(idx), deadline_s=0.003, max_bucket=8, k=3,
+            service_model=lambda kind, bucket: model[kind],
+        )
+        for i, t in enumerate(arrivals):
+            nd = front.next_event_time()
+            while nd is not None and nd <= t:
+                front.pump(nd)
+                nd = front.next_event_time()
+            front.submit_query(vectors[i], float(t))
+            if i == 10:
+                front.submit_update(
+                    insert_batch([700], vectors[:1]), float(t))
+            front.pump(float(t))
+        front.drain(float(arrivals[-1]) + 1.0)
+        return [
+            ([r.req_id for r in d.requests], d.bucket, d.reason,
+             d.formed_t, tuple(r.complete_t for r in d.requests),
+             tuple(r.snapshot_seq for r in d.requests))
+            for d in front.completed
+        ], front.metrics.stats(horizon_s=1.0)
+
+    (g1, s1), (g2, s2) = run(), run()
+    assert g1 == g2
+    assert s1 == s2
+
+
+def test_serialize_updates_queues_reads_behind_writes():
+    """The no-snapshot baseline: with one shared lane, a search arriving
+    while an update occupies the engine waits; with snapshot isolation it
+    does not.  (Virtual-lane accounting — the quantity serve_bench
+    measures at scale.)"""
+    model = {"search": 0.001, "update": 0.050, "publish": 0.0}
+
+    def latency(serialize):
+        idx, data, _ = _bootstrap("ip")
+        front = ServingFront(
+            StreamingEngine(idx), deadline_s=0.0, max_bucket=4, k=3,
+            serialize_updates=serialize,
+            service_model=lambda kind, bucket: model[kind],
+        )
+        front.submit_update(insert_batch([600], data[:1]), 0.0)
+        req = front.submit_query(data[0], 0.001)
+        front.pump(0.001)
+        return req.latency_s
+
+    assert latency(False) == pytest.approx(0.001)           # isolated
+    assert latency(True) == pytest.approx(0.050, abs=0.002)  # queued
+
+
+# ---------------------------------------------------------------------------
+# The sharded engine behind the same front door
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_engine_snapshot_isolation_single_device_mesh():
+    import jax
+
+    from repro.core.distributed import ShardedIndex
+    from repro.serving import ShardedEngine
+
+    cfg = ann_cfg(8, 256)
+    mesh = jax.make_mesh((1,), ("shard",))
+    idx = ShardedIndex(cfg, mesh, n_logical=2, max_external_id=2048)
+    rng = np.random.default_rng(1)
+    data = rng.standard_normal((96, 8)).astype(np.float32)
+    idx.insert(np.arange(96), data)
+
+    front = ServingFront(ShardedEngine(idx), deadline_s=0.0,
+                         max_bucket=4, k=3, publish_every=10**9)
+    queries = data[:4] + 0.01
+
+    def serve(now):
+        reqs = [front.submit_query(q, now) for q in queries]
+        front.pump(now + 1.0)
+        return reqs
+
+    before = serve(0.0)
+    new_ids = 1000 + np.arange(4)
+    front.submit_update(insert_batch(new_ids, queries), 1.0)
+    front.pump(2.0)
+    after = serve(3.0)
+    for r0, r1 in zip(before, after):
+        assert r0.snapshot_seq == r1.snapshot_seq == 0
+        np.testing.assert_array_equal(r0.ext_ids, r1.ext_ids)
+    front.publish(4.0)
+    final = serve(5.0)
+    for i, r in enumerate(final):
+        assert r.snapshot_seq == 1
+        assert r.ext_ids[0] == new_ids[i]
+
+    # search_state over a snapshot == live search, bit for bit
+    snap = idx.snapshot_states()
+    live = idx.search(queries, k=3)
+    held = idx.search_state(snap, queries, k=3)
+    np.testing.assert_array_equal(live[0], held[0])
+    np.testing.assert_array_equal(live[2], held[2])
