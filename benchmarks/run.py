@@ -19,6 +19,7 @@ MODULES = [
     "perf_ann",
     "backend_bench",
     "search_bench",
+    "scale_bench",
     "update_bench",
     "shard_bench",
     "serve_bench",

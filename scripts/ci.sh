@@ -57,6 +57,13 @@ echo "== durability: save/restore + crash recovery (BENCH_recover.json) =="
 python -m benchmarks.recover_bench --smoke --out BENCH_recover.json
 cat BENCH_recover.json
 
+echo "== quantized tier + capacity growth (BENCH_scale.json) =="
+# --smoke enforces the memory-tier gates: int8 recall@10 >= f32 - 0.02 at
+# matched l, hop-resident footprint <= 0.45x f32, and a stream growing
+# through >= 2 capacity buckets with intact id maps and no recall cliff
+python -m benchmarks.scale_bench --smoke --out BENCH_scale.json
+cat BENCH_scale.json
+
 echo "== docs freshness (docs/API.md symbol index) =="
 python scripts/check_docs.py
 

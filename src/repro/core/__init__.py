@@ -48,6 +48,9 @@ from .consolidate import (
 from .delete import ip_delete, ip_delete_many, lazy_delete, lazy_delete_many
 from .distributed import ShardedIndex, as_int_payload
 from .driver import RunbookReport, StepMetrics, run_runbook
+
+# online capacity growth: power-of-two slot buckets, one recompile each
+from .grow import ensure_capacity, grow_index, needs_growth, next_capacity
 from .index import EvalCounters, OpCounters, StreamingIndex
 from .insert import insert, insert_many
 
@@ -60,6 +63,14 @@ from .persist import (
     validate_index_manifest,
 )
 from .prune import robust_prune
+
+# quantized memory tier: int8 hop-loop distances, exact f32 rescoring
+from .quant import (
+    QuantStore,
+    dequantize_rows,
+    init_quant_store,
+    quantize_rows,
+)
 from .recall import brute_force_topk, graph_recall, recall_at_k
 from .runbook import (
     Runbook,
@@ -108,6 +119,7 @@ __all__ = [
     "KIND_DELETE",
     "KIND_INSERT",
     "OpCounters",
+    "QuantStore",
     "Runbook",
     "RunbookReport",
     "RunbookStep",
@@ -137,13 +149,17 @@ __all__ = [
     "consolidate_stacked",
     "consolidation_due",
     "delete_batch",
+    "dequantize_rows",
     "device_sweep",
+    "ensure_capacity",
     "fresh_consolidate",
     "get_backend",
     "get_policy",
     "graph_recall",
     "greedy_search",
+    "grow_index",
     "init_index_state",
+    "init_quant_store",
     "init_state",
     "insert",
     "insert_batch",
@@ -159,11 +175,14 @@ __all__ = [
     "maybe_consolidate",
     "merge_topk",
     "mixed_update_batch",
+    "needs_growth",
     "next_bucket",
+    "next_capacity",
     "noop_update_batch",
     "pad_batch",
     "pad_update_batch",
     "plan_segments",
+    "quantize_rows",
     "recall_at_k",
     "register_backend",
     "register_policy",

@@ -31,7 +31,10 @@ costs nothing at run time.  Per-slot squared norms are precomputed once in
 ``GraphState.norms`` at insert time; every backend consumes that cache
 instead of re-reducing rows per call.
 
-Future backends (quantized distances, GPU, multi-host) plug in with
+Each engine also serves the quantized memory tier (``core/quant.py``)
+through ``dists_to_ids_batched_q`` / ``beam_superstep_q`` — int8 traversal
+distances the batched beam engine hops on when ``ANNConfig.quantized`` is
+set.  Future backends (GPU, multi-host) plug in with
 ``@register_backend("name")``.
 """
 from __future__ import annotations
@@ -100,6 +103,33 @@ class DistanceBackend:
 
         return superstep_reference(
             self.dists_to_ids_batched, state, cfg, queries, carry,
+            h=h, l=l, max_visits=max_visits,
+        )
+
+    # -- the quantized memory tier (core/quant.py) --------------------------
+
+    def dists_to_ids_batched_q(self, state: GraphState, cfg: ANNConfig,
+                               queries, ids):
+        """f32[B, M] *traversal-tier* distances from ``queries[b]`` to the
+        int8 codes of slots ``ids[b]`` (``state.quant`` must be present);
+        inf where INVALID.  The batched beam engine hops on these when
+        ``cfg.quantized`` and rescores the final top-k with the exact
+        ``dists_to_ids_batched``.  Default: the shared jnp math from
+        ``core/quant.py``; kernel engines override with the int8 gather
+        kernel."""
+        from .quant import quant_dists_to_ids_batched
+
+        return quant_dists_to_ids_batched(state, cfg, queries, ids)
+
+    def beam_superstep_q(self, state: GraphState, cfg: ANNConfig, queries,
+                         carry, *, h: int, l: int, max_visits: int):
+        """``beam_superstep`` over the quantized tier: same carry contract,
+        distances from ``dists_to_ids_batched_q``.  Engines with a fused
+        int8 multi-hop kernel override it."""
+        from .search_batched import superstep_reference
+
+        return superstep_reference(
+            self.dists_to_ids_batched_q, state, cfg, queries, carry,
             h=h, l=l, max_visits=max_visits,
         )
 
@@ -268,6 +298,34 @@ class PallasBackend(JnpBackend):
         return type(carry)(bi, bd, be != 0, seen, vi, vd, n_vis, n_comps,
                            n_hops)
 
+    def dists_to_ids_batched_q(self, state, cfg, queries, ids):
+        from ..kernels import ops
+
+        return ops.gather_distances_batched_q(
+            ids, queries, state.quant.codes, state.quant.scale,
+            state.quant.qnorms, metric=cfg.metric, interpret=self.interpret,
+        )
+
+    def beam_superstep_q(self, state, cfg, queries, carry, *, h, l,
+                         max_visits):
+        from . import bitset
+        from .types import navigable
+        from ..kernels import ops
+
+        nav_words = bitset.pack_bits(navigable(state))
+        ret_words = bitset.pack_bits(state.active)
+        out = ops.beam_hop_q(
+            queries, carry.beam_ids, carry.beam_dists,
+            carry.beam_exp.astype(jnp.int32), carry.seen, carry.vis_ids,
+            carry.vis_dists, carry.n_vis, carry.n_comps, carry.n_hops,
+            state.adj, state.quant.codes, state.quant.scale,
+            state.quant.qnorms, nav_words, ret_words,
+            metric=cfg.metric, h=h, interpret=self.interpret,
+        )
+        bi, bd, be, seen, vi, vd, n_vis, n_comps, n_hops = out
+        return type(carry)(bi, bd, be != 0, seen, vi, vd, n_vis, n_comps,
+                           n_hops)
+
     def brute_force_topk(self, state, cfg, queries, *, k):
         from ..kernels import ops
 
@@ -296,6 +354,14 @@ class RefBackend(JnpBackend):
 
     # dists_to_ids_batched: the inherited vmap default IS the batched ref
     # oracle (kernels/ref.gather_distance_batched_ref is the same vmap)
+
+    def dists_to_ids_batched_q(self, state, cfg, queries, ids):
+        from ..kernels import ref
+
+        return ref.quant_gather_distance_batched_ref(
+            ids, queries, state.quant.codes, state.quant.scale,
+            state.quant.qnorms, metric=cfg.metric,
+        )
 
     def brute_force_topk(self, state, cfg, queries, *, k):
         from ..kernels import ref

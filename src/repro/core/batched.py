@@ -33,6 +33,7 @@ from .delete import DeleteStats, _next_start, _topc_candidates
 from .edges import append_one, remove_target_rows
 from .insert import InsertStats
 from .prune import robust_prune
+from .quant import quant_write_rows
 from .search_batched import batched_greedy_search
 from .types import INVALID, ANNConfig, GraphState, clip_ids
 
@@ -71,6 +72,13 @@ def insert_many_batched(state: GraphState, cfg: ANNConfig, xs: jax.Array,
             jnp.sum(xs_f * xs_f, axis=1), mode="drop"
         ),
     )
+    if state.quant is not None:
+        # int8 tier written in phase 0 too, so the phase-1 searches (which
+        # traverse on quantized distances when cfg.quantized) see a
+        # consistent code table
+        state = state._replace(
+            quant=quant_write_rows(state.quant, write_idx, xs_f)
+        )
 
     # phase 1: one shared-hop-loop batched search against the pre-batch graph
     # (masked lanes are dead from hop 0 and contribute no comps or hops)

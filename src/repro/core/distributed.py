@@ -95,10 +95,11 @@ from .api import (
 from ..checkpoint.manager import CheckpointMismatchError
 from .backend import BIG
 from .consolidate import consolidate_stacked
+from .grow import ensure_capacity
 from .persist import restore_index, save_index
 from .search_batched import batched_greedy_search, merge_topk, next_bucket
 from .types import (
-    INVALID, ANNConfig, IndexState, UpdateBatch, clip_ids,
+    INVALID, KIND_INSERT, ANNConfig, IndexState, UpdateBatch, clip_ids,
     init_index_state, noop_update_batch,
 )
 
@@ -165,7 +166,7 @@ class ShardedIndex:
     def __init__(self, cfg: ANNConfig, mesh: Mesh, axis: str = "shard",
                  policy: str = "ip", max_external_id: Optional[int] = None,
                  routing: str = "compact", sequential: bool = True,
-                 n_logical: Optional[int] = None):
+                 n_logical: Optional[int] = None, auto_grow: bool = True):
         if routing not in ("compact", "replicate"):
             raise ValueError(f"unknown routing {routing!r}")
         self.cfg = cfg
@@ -179,6 +180,7 @@ class ShardedIndex:
         # compaction also shrinks the per-shard (B, R) beam tiles S-fold
         # (masked lanes of a replicated batch still pay tile width there).
         self.sequential = sequential
+        self.auto_grow = auto_grow
         self.n_shards = mesh.shape[axis]
         self.n_logical = int(n_logical) if n_logical else self.n_shards
         if self.n_logical % self.n_shards:
@@ -200,14 +202,21 @@ class ShardedIndex:
             NamedSharding(mesh, P(axis)),
         )
         self._shard_spec = NamedSharding(mesh, P(axis))
+        self._build_programs()
+
+    # -- SPMD programs -------------------------------------------------------
+
+    def _build_programs(self):
+        """(Re)build every SPMD program against the current ``self.cfg``.
+        Capacity growth walks ``n_cap`` into a new power-of-two bucket,
+        which changes the static shapes every program closed over — one
+        rebuild (and recompile on next dispatch) per bucket."""
         self._search = self._build_search()
         self._search_part = self._build_search_partitioned()
         self._update = self._build_update()
         self._update_compact = self._build_update_compact()
         self._update_segment = self._build_update_segment()
         self._update_segment_compact = self._build_update_segment_compact()
-
-    # -- SPMD programs -------------------------------------------------------
 
     def _build_search(self):
         cfg, axis, G = self.cfg, self.axis, self.rows_per_shard
@@ -516,6 +525,37 @@ class ShardedIndex:
         return (np.asarray(ext_ids, np.int64) * 2654435761 % 2**31
                 % n).astype(np.int32)
 
+    def _ensure_capacity(self, max_owned: int) -> bool:
+        """Grow every logical row into the next capacity bucket when the
+        fullest row plus ``max_owned`` incoming inserts would cross the
+        high-water mark (``core/grow.py``).  All ``n_logical`` rows grow
+        in LOCKSTEP — the stacked state keeps one static shape, so one
+        grow costs one program rebuild regardless of L."""
+        if not self.auto_grow:
+            return False
+        states, cfg, grew = ensure_capacity(self.states, self.cfg, max_owned)
+        if not grew:
+            return False
+        self.states = jax.device_put(states, self._shard_spec)
+        self.cfg = cfg
+        self._build_programs()
+        return True
+
+    def _owned_insert_demand(self, batches) -> int:
+        """Worst-case per-logical-row insert count of an update stream:
+        the growth trigger's ``incoming`` (deletes never consume slots)."""
+        counts = np.zeros((self.n_logical,), np.int64)
+        for batch in batches:
+            ins = np.asarray(batch.valid) & (
+                np.asarray(batch.kind) == KIND_INSERT
+            )
+            if ins.any():
+                owners = self.route(np.asarray(batch.ext_id, np.int64))
+                counts += np.bincount(
+                    owners[ins], minlength=self.n_logical
+                )
+        return int(counts.max()) if counts.size else 0
+
     def _apply_update(self, batch, owners):
         """Route one bucket-padded ``UpdateBatch`` through the selected
         update program (``self.routing``).  ``owners``: i32[B] per-lane
@@ -554,6 +594,10 @@ class ShardedIndex:
                 f"{ext_ids[oob][:8].tolist()}"
             )
         owners = self.route(ext_ids)
+        if len(ext_ids):
+            self._ensure_capacity(int(np.bincount(
+                owners, minlength=self.n_logical
+            ).max()))
         batch = insert_batch(ext_ids, vectors)
         pad = batch.kind.shape[0] - len(ext_ids)
         ok, slot = self._apply_update(
@@ -646,6 +690,11 @@ class ShardedIndex:
         (the pre-rework path re-derived a bucket and re-packed every step
         of every segment inside the segment loop)."""
         pol = get_policy(self.policy)
+        # grow BEFORE planning/packing: the whole stream's per-row insert
+        # demand is provisioned up front so every segment compiles against
+        # one n_cap bucket end to end
+        batches = list(batches)
+        self._ensure_capacity(self._owned_insert_demand(batches))
         results = []
 
         def _post(res):
@@ -668,7 +717,6 @@ class ShardedIndex:
             return results
 
         # pack each step once (host, numpy); bc joins the plan key
-        batches = list(batches)
         packed, positions, owner_rows, bcs = [], [], [], []
         for batch in batches:
             own = np.where(

@@ -48,8 +48,9 @@ from .api import (
     run_segments,
     search,
 )
+from .grow import ensure_capacity
 from .recall import brute_force_topk, recall_at_k
-from .types import ANNConfig, GraphState, IndexState
+from .types import KIND_INSERT, ANNConfig, GraphState, IndexState
 
 import jax
 import jax.numpy as jnp
@@ -92,13 +93,18 @@ class StreamingIndex:
         max_external_id: Optional[int] = None,
         batch_updates: bool = False,
         backend: Optional[str] = None,
+        auto_grow: bool = True,
     ):
         """``mode``: the update policy name (legacy keyword — policies are
         registered objects now, see ``core/api.py``).  ``batch_updates``:
         beyond-paper optimisation — run the search phase of a batch of
         updates data-parallel (relaxed visibility, see core/batched.py).
         ``backend``: override ``cfg.backend`` (the distance kernel engine;
-        see core/backend.py) without rebuilding the config by hand."""
+        see core/backend.py) without rebuilding the config by hand.
+        ``auto_grow``: grow ``n_cap`` into the next power-of-two bucket
+        when an update stream would cross the high-water mark
+        (``core/grow.py``); disable to restore the hard
+        capacity-exhausted contract."""
         assert mode in available_policies(), (
             f"unknown policy {mode!r}; available: {available_policies()}"
         )
@@ -108,6 +114,7 @@ class StreamingIndex:
         self.mode = mode
         self.policy = get_policy(mode)
         self.batch_updates = batch_updates
+        self.auto_grow = auto_grow
         if max_external_id is None:
             max_external_id = cfg.n_cap * 4
         self.max_external_id = max_external_id
@@ -145,6 +152,17 @@ class StreamingIndex:
         )
         return res
 
+    def _ensure_capacity(self, incoming: int) -> bool:
+        """Grow the handle into a bigger capacity bucket (``core/grow.py``)
+        when ``incoming`` more inserts would cross the high-water mark.
+        One recompile per bucket — same discipline as batch bucketing."""
+        if not self.auto_grow:
+            return False
+        self.istate, self.cfg, grew = ensure_capacity(
+            self.istate, self.cfg, incoming
+        )
+        return grew
+
     def _apply_insert(self, ext_ids, vectors, batched: bool):
         oob = (ext_ids < 0) | (ext_ids >= self.max_external_id)
         if oob.any():
@@ -152,6 +170,7 @@ class StreamingIndex:
                 f"external id(s) outside [0, {self.max_external_id}): "
                 f"{ext_ids[oob][:8].tolist()}"
             )
+        self._ensure_capacity(len(ext_ids))
         res = self._apply(
             insert_batch(ext_ids, vectors), sequential=not batched
         )
@@ -241,6 +260,14 @@ class StreamingIndex:
         invalid lanes are silent no-ops here; the per-op ``insert``/
         ``delete`` paths keep their exception contracts).  Returns the
         per-segment ``SegmentResult`` list."""
+        # grow BEFORE planning: segments run compiled against one n_cap
+        # bucket end to end, so the whole stream's insert demand is
+        # provisioned up front (conservative — deletes inside the stream
+        # only return capacity)
+        self._ensure_capacity(sum(
+            int(np.asarray(s.valid & (s.kind == KIND_INSERT)).sum())
+            for s in steps
+        ))
         plan = plan_segments(steps, splits=splits, max_t=max_t)
         t0 = time.perf_counter()
         before = (

@@ -10,6 +10,7 @@ from jax import lax
 
 from .edges import append_one
 from .prune import robust_prune
+from .quant import quant_write_rows
 from .search import greedy_search
 from .types import INVALID, ANNConfig, GraphState, clip_ids
 
@@ -42,6 +43,11 @@ def insert(state: GraphState, cfg: ANNConfig, x: jax.Array):
             free_top=st.free_top - 1,
             n_active=st.n_active + 1,
         )
+        if st.quant is not None:
+            # keep the int8 tier in lockstep with the f32 write
+            st = st._replace(
+                quant=quant_write_rows(st.quant, sslot[None], x[None])
+            )
         empty = st.start < 0
 
         def first_point(s: GraphState):

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from ..checkpoint.manager import CheckpointManager, CheckpointMismatchError
 from ..ft.supervisor import SimulatedFailure
 from .api import SegmentPlan, segment_step
+from .grow import grow_index
 from .types import ANNConfig, IndexState, init_index_state
 
 # Bumped whenever the IndexState pytree layout changes incompatibly; a
@@ -55,10 +56,14 @@ from .types import ANNConfig, IndexState, init_index_state
 SCHEMA_VERSION = 1
 
 # Config fields that must match bit-for-bit between writer and reader: they
-# size the state tensors (dim, n_cap, r) or change distance semantics
-# (metric).  Beam widths / thresholds are serving knobs — they may differ
-# across a restore and are recorded but not enforced.
-CFG_CRITICAL = ("dim", "n_cap", "r", "metric")
+# size the state tensors (dim, r), change distance semantics (metric) or the
+# pytree structure (quantized).  Beam widths / thresholds are serving knobs —
+# they may differ across a restore and are recorded but not enforced.
+# ``n_cap`` is validated separately: online growth (core/grow.py) walks
+# capacities through power-of-two buckets, so a checkpoint restores into any
+# bucket >= the one it was written under (the state is grown after load);
+# only a SHRINK is a mismatch.
+CFG_CRITICAL = ("dim", "r", "metric", "quantized")
 
 
 def _index_meta(state: IndexState, cfg: ANNConfig, policy: str) -> dict:
@@ -134,6 +139,15 @@ def validate_index_manifest(manifest: dict, cfg: ANNConfig,
             "config mismatch (checkpoint vs caller): "
             + ", ".join(f"{k}={a!r} vs {b!r}" for k, (a, b) in drift.items())
         )
+    # n_cap: manifest <= caller is a GROW (restore_index grows the loaded
+    # state into the caller's bucket); manifest > caller would shrink, which
+    # growth cannot express — typed mismatch
+    if saved.get("n_cap", mine["n_cap"]) > mine["n_cap"]:
+        raise CheckpointMismatchError(
+            f"checkpoint capacity n_cap={saved.get('n_cap')} exceeds the "
+            f"caller's {mine['n_cap']} (capacity buckets only grow; restore "
+            f"with n_cap >= the checkpoint's)"
+        )
     if policy is not None and meta.get("policy") != policy:
         raise CheckpointMismatchError(
             f"checkpoint was written under policy {meta.get('policy')!r}, "
@@ -161,6 +175,13 @@ def restore_index(
     where ``extra`` is the manifest extra (``extra["index"]`` holds the
     metadata: policy, max_external_id, n_logical, saved config).
 
+    A checkpoint written under a SMALLER capacity bucket restores cleanly:
+    the state is loaded against a template of the manifest's ``n_cap`` and
+    grown (``core/grow.py::grow_index`` — pure, deterministic) into the
+    caller's bucket, so ``grow(restore(save(s)))`` is bit-identical to
+    ``restore(save(grow(s)))``.  A LARGER manifest capacity is a typed
+    mismatch (growth cannot shrink).
+
     ``device=False`` returns host numpy leaves (``ShardedIndex.restore``
     device_puts them itself, under the restore mesh's sharding)."""
     if step is None:
@@ -168,8 +189,14 @@ def restore_index(
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {manager.dir}")
     meta = validate_index_manifest(manager.manifest(step), cfg, policy)
-    template = _index_template(cfg, meta)
+    saved_cap = int(meta.get("config", {}).get("n_cap", cfg.n_cap))
+    load_cfg = dataclasses.replace(cfg, n_cap=saved_cap)
+    template = _index_template(load_cfg, meta)
     step, tree, extra = manager.load(step, like=template)
+    if saved_cap != cfg.n_cap:
+        tree, _ = grow_index(
+            jax.tree.map(jnp.asarray, tree), load_cfg, cfg.n_cap
+        )
     if device:
         tree = jax.tree.map(jnp.asarray, tree)
     return step, tree, extra

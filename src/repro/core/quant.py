@@ -1,0 +1,125 @@
+"""Quantized memory tier: per-row symmetric int8 codes for the hop loop.
+
+FreshDiskANN holds *compressed* vectors in fast memory for graph traversal
+and rescores the final candidate list against the full-precision table; the
+hop loop's gather-distance tiles are bandwidth-bound, so an int8 code table
+cuts the carried bytes ~4x exactly where the traversal cost lives.  The
+TPU-native transcription here:
+
+  * ``QuantStore`` — a ``GraphState`` leaf holding per-row symmetric int8
+    codes plus one f32 scale per row (``scale = max|x| / 127``) and the
+    cached squared norm of the *dequantized* row (the l2 fast-path term,
+    mirroring ``GraphState.norms``);
+  * codes are maintained incrementally at the two insert write sites
+    (``core/insert.py``, ``core/batched.py``) via ``quant_write_rows``;
+    deletes and consolidation never touch vector payloads, so the store
+    rides ``_replace`` untouched there;
+  * ``quant_dists_to_ids_batched`` is the traversal-tier distance: the int8
+    rows are gathered, the dot product accumulates in f32, and the per-row
+    scale is applied to the *product* (``(codes . q) * scale``) — the exact
+    op order the Pallas kernels (``kernels/quant_gather.py``, the quantized
+    ``beam_hop``) and the ref oracle replicate, so the three engines agree
+    bitwise in interpret mode.
+
+The search engine (``core/search_batched.py``) traverses on these distances
+when ``cfg.quantized`` is set and then *exactly rescores* the final top-k
+against the f32 ``GraphState.vectors`` table before ids are returned — the
+quantization error can reorder the beam's tail but never the reported
+distances (see the "Memory tier" section of docs/ARCHITECTURE.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.inf
+
+
+class QuantStore(NamedTuple):
+    """Per-row symmetric int8 quantization of the vector table."""
+
+    codes: jax.Array   # i8[n_cap, dim]   round(x / scale), in [-127, 127]
+    scale: jax.Array   # f32[n_cap]       max|x| / 127 per row (1.0 for zero rows)
+    qnorms: jax.Array  # f32[n_cap]       squared L2 norm of the dequantized row
+
+
+def init_quant_store(n_cap: int, dim: int) -> QuantStore:
+    return QuantStore(
+        codes=jnp.zeros((n_cap, dim), jnp.int8),
+        scale=jnp.ones((n_cap,), jnp.float32),
+        qnorms=jnp.zeros((n_cap,), jnp.float32),
+    )
+
+
+def quantize_rows(xs: jax.Array):
+    """Symmetric per-row int8 quantization of ``xs`` (..., D).
+
+    Returns ``(codes i8, scale f32)`` with ``scale = max|x| / 127`` per row
+    (1.0 for all-zero rows so the division is always safe) and
+    ``codes = round(x / scale)`` clipped to [-127, 127].  The round-trip
+    error is bounded elementwise: ``|dequantize(codes, scale) - x| <=
+    scale / 2``."""
+    xs = xs.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xs), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    codes = jnp.clip(
+        jnp.round(xs / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_rows(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 reconstruction ``codes * scale`` of quantized rows (..., D)."""
+    return codes.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def quant_write_rows(quant: QuantStore, write_idx, xs: jax.Array,
+                     *, mode: str = "drop") -> QuantStore:
+    """Quantize ``xs`` (B, D) and scatter them into rows ``write_idx`` of the
+    store.  Out-of-range indices DROP their writes (same contract as the
+    f32 write sites in ``core/batched.py``), so masked lanes are no-ops."""
+    codes, scale = quantize_rows(xs)
+    deq = dequantize_rows(codes, scale)
+    qnorms = jnp.sum(deq * deq, axis=-1).astype(jnp.float32)
+    return QuantStore(
+        codes=quant.codes.at[write_idx].set(codes, mode=mode),
+        scale=quant.scale.at[write_idx].set(scale, mode=mode),
+        qnorms=quant.qnorms.at[write_idx].set(qnorms, mode=mode),
+    )
+
+
+def quant_dists_to_ids_batched(state, cfg, queries, ids):
+    """f32[B, M] traversal-tier distances from ``queries[b]`` to the int8
+    codes of slots ``ids[b]``; inf where INVALID.
+
+    Op order is the contract every engine must match: the raw int8 dot
+    product accumulates in f32, THEN the per-row scale multiplies the
+    product — ``prod = (codes[id] . q) * scale[id]`` — and the l2 norm term
+    comes from the cached ``qnorms`` (never recomputed), so jnp, ref and
+    the interpret-mode Pallas kernels agree bitwise."""
+    q = state.quant
+    n_cap = q.codes.shape[0]
+
+    def one(qv, row):
+        safe = jnp.clip(row, 0, n_cap - 1)
+        raw = q.codes[safe].astype(jnp.float32) @ qv
+        prod = raw * q.scale[safe]
+        if cfg.metric == "l2":
+            d = jnp.dot(qv, qv) + q.qnorms[safe] - 2.0 * prod
+        else:
+            d = -prod
+        return jnp.where(row >= 0, d, BIG)
+
+    return jax.vmap(one)(queries.astype(jnp.float32), ids)
+
+
+__all__ = [
+    "QuantStore",
+    "dequantize_rows",
+    "init_quant_store",
+    "quant_dists_to_ids_batched",
+    "quant_write_rows",
+    "quantize_rows",
+]

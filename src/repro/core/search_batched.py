@@ -257,12 +257,28 @@ def batched_greedy_search(
     no hops to the shared loop and returns all-INVALID results — the
     mechanism bucket-padded callers (``search_batch``, ``core/api.py``) use
     to make padding lanes free.
+
+    When ``cfg.quantized`` is set (and the state carries a quant store),
+    the hop loop traverses on int8 traversal-tier distances
+    (``dists_to_ids_batched_q``) and the final top-k is *exactly rescored*
+    against the f32 vector table before selection — returned ``topk_dists``
+    are bit-identical to recomputing ``dists_to_ids_batched`` on the
+    returned ids.  Quantization error can therefore perturb which
+    candidates reach the beam, never the reported distances.
     """
     TRACE_COUNTER["batched_greedy_search"] += 1
     if max_visits is None:
         max_visits = cfg.max_visits(l)
     backend = resolve_backend(cfg)
-    dist_fn = distance_fn or backend.dists_to_ids_batched
+    # ``state.quant is not None`` is a pytree-structure check, decided at
+    # trace time like cfg itself; an explicit distance_fn override wins
+    use_q = (
+        cfg.quantized and state.quant is not None and distance_fn is None
+    )
+    dist_fn = distance_fn or (
+        backend.dists_to_ids_batched_q if use_q
+        else backend.dists_to_ids_batched
+    )
     returnable = state.active
 
     b = queries.shape[0]
@@ -312,6 +328,10 @@ def batched_greedy_search(
         def body(s):
             return superstep_reference(dist_fn, state, cfg, queries, s,
                                        h=h, l=l, max_visits=max_visits)
+    elif use_q:
+        def body(s):
+            return backend.beam_superstep_q(state, cfg, queries, s, h=h,
+                                            l=l, max_visits=max_visits)
     else:
         def body(s):
             return backend.beam_superstep(state, cfg, queries, s, h=h,
@@ -321,6 +341,18 @@ def batched_greedy_search(
 
     # --- final top-k over each lane's beam, filtered to live vertices --------
     ret = returnable[clip_ids(out.beam_ids, cfg.n_cap)] & (out.beam_ids >= 0)
+    if use_q:
+        # exact rescore (FreshDiskANN): re-rank the surviving beam against
+        # the full-precision table so the selection (and the reported
+        # distances) never carry quantization error; one (B, l) exact tile
+        # per query batch vs. the hops' many (B, R) quantized tiles
+        beam_d = backend.dists_to_ids_batched(
+            state, cfg, queries, jnp.where(ret, out.beam_ids, INVALID)
+        )
+        out = out._replace(
+            beam_dists=beam_d,
+            n_comps=out.n_comps + jnp.sum(ret, axis=1).astype(jnp.int32),
+        )
     final_d = jnp.where(ret, out.beam_dists, BIG)
     kk = min(k, l)  # the beam holds l entries; pad the tail with INVALID
     top_d, top_i = lax.top_k(-final_d, kk)
@@ -334,9 +366,17 @@ def batched_greedy_search(
             topk_ids, ((0, 0), (0, k - kk)), constant_values=INVALID
         )
         top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=-BIG)
+    topk_dists = -top_d
+    if use_q:
+        # recompute on exactly the returned (B, k) ids so topk_dists are
+        # BIT-equal to the caller-side f32 rescore oracle (same jitted
+        # call, same operand shapes => same reduction order)
+        topk_dists = backend.dists_to_ids_batched(
+            state, cfg, queries, topk_ids
+        )
     return SearchResult(
         topk_ids=topk_ids,
-        topk_dists=-top_d,
+        topk_dists=topk_dists,
         visited_ids=out.vis_ids,
         visited_dists=out.vis_dists,
         n_visited=out.n_vis,

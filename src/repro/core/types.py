@@ -16,11 +16,13 @@ stream can be expressed as ``lax.scan`` (serial, paper-faithful) or batched.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .quant import QuantStore, init_quant_store
 
 INVALID = -1
 
@@ -63,6 +65,12 @@ class ANNConfig:
     # H hops per outer-loop iteration.  Traversal is lane-exact against
     # the unfused engine for every H.
     hop_fused: int = -1
+    # Quantized memory tier (core/quant.py): maintain per-row symmetric
+    # int8 codes next to the f32 table, traverse the beam on quantized
+    # distances and exactly rescore the final top-k against f32 before
+    # ids are returned.  Changes the GraphState pytree structure (a
+    # ``quant`` leaf appears), so it is checkpoint-critical.
+    quantized: bool = False
 
     def max_visits(self, l: int) -> int:
         return l + self.max_visit_slack
@@ -103,6 +111,10 @@ class GraphState(NamedTuple):
     start: jax.Array       # i32[]  entry point (INVALID when empty)
     n_active: jax.Array    # i32[]
     n_pending: jax.Array   # i32[]  tombstoned (fresh) or quarantined (ip) count
+    # Quantized memory tier (core/quant.py), present iff ``cfg.quantized``.
+    # ``None`` is an empty pytree node, so unquantized states keep their
+    # pre-existing leaf structure (and checkpoint layout) exactly.
+    quant: Optional[QuantStore] = None
 
 
 def init_state(cfg: ANNConfig, dtype=jnp.float32) -> GraphState:
@@ -119,6 +131,7 @@ def init_state(cfg: ANNConfig, dtype=jnp.float32) -> GraphState:
         start=jnp.int32(INVALID),
         n_active=jnp.int32(0),
         n_pending=jnp.int32(0),
+        quant=init_quant_store(n, cfg.dim) if cfg.quantized else None,
     )
 
 
@@ -275,4 +288,13 @@ def clip_ids(ids: jax.Array, n_cap: int) -> jax.Array:
 
 
 def as_numpy_state(state: GraphState) -> dict:
-    return {k: np.asarray(v) for k, v in state._asdict().items()}
+    return {
+        k: (
+            v
+            if v is None
+            else type(v)(*map(np.asarray, v))
+            if isinstance(v, tuple)
+            else np.asarray(v)
+        )
+        for k, v in state._asdict().items()
+    }

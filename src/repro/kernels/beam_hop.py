@@ -79,13 +79,19 @@ def _setbits(seen, ids, mask):
 
 
 def _lane_hop(metric, l, r, mv, n_cap, tile_k, fetch_adj, fetch_tile,
-              norms, nav_words, ret_words, q, c):
+              norms, nav_words, ret_words, q, c, *, scales=None):
     """ONE masked hop of one lane — the per-lane transcription of the
     engine's shared hop body (``core/search_batched.make_hop_body``), with
     the adjacency/vector reads abstracted behind ``fetch_adj(sv, active)``
     / ``fetch_tile(t, tile_ids, active)`` so the kernel (DMA) and the ref
     oracle (plain gather) share every other op.  An inactive lane is an
-    exact no-op."""
+    exact no-op.
+
+    ``scales`` activates the quantized memory tier: ``fetch_tile`` then
+    returns raw int8 codes cast to f32 and the per-row scale multiplies the
+    dot *product* — the exact op order of
+    ``core/quant.py::quant_dists_to_ids_batched`` (``norms`` must be the
+    cached dequantized-row ``qnorms``)."""
     bi, bd, be, seen, vi, vd, n_vis, n_comps, n_hops = c
     active = (
         jnp.any((bi >= 0) & (be == 0) & jnp.isfinite(bd))
@@ -133,6 +139,13 @@ def _lane_hop(metric, l, r, mv, n_cap, tile_k, fetch_adj, fetch_tile,
         tile_ids = ids_p[t * tile_k:(t + 1) * tile_k]
         x = fetch_tile(t, tile_ids, active)                   # (tile_k, d)
         prod = jnp.dot(x, q, preferred_element_type=jnp.float32)
+        if scales is not None:
+            s_t = jnp.where(
+                tile_ids >= 0,
+                scales[jnp.clip(tile_ids, 0, n_cap - 1)],
+                0.0,
+            ).astype(jnp.float32)
+            prod = prod * s_t
         if metric == "l2":
             x2 = jnp.where(
                 tile_ids >= 0,
@@ -322,6 +335,193 @@ def beam_hop_fused(
     )
     bi, bd, be, seen_o, vi, vd, c = outs
     return bi, bd, be, seen_o, vi, vd, c[:, 0], c[:, 1], c[:, 2]
+
+
+def _kernel_q(metric, h, l, r, mv, n_cap, w, tile_k, d,
+              q_ref, bi_ref, bd_ref, be_ref, seen_ref, vi_ref, vd_ref, c_ref,
+              nav_ref, ret_ref, n_ref, s_ref, adj_ref, codes_ref,
+              bi_out, bd_out, be_out, seen_out, vi_out, vd_out, c_out,
+              adj_scratch, x_scratch, sem_a, sem_v):
+    """The quantized twin of ``_kernel``: the HBM table is the int8 code
+    matrix (row DMAs carry D bytes, not 4D), ``n_ref`` carries the cached
+    dequantized-row qnorms and ``s_ref`` the per-row scales; dequantization
+    happens in-register via the ``scales`` path of ``_lane_hop``."""
+    q = q_ref[0, :]
+    norms = n_ref[0, :]
+    scales = s_ref[0, :]
+    nav_words = nav_ref[0, :]
+    ret_words = ret_ref[0, :]
+
+    def fetch_adj(sv, active):
+        @pl.when(active)
+        def _():
+            cp = pltpu.make_async_copy(
+                adj_ref.at[pl.ds(sv, 1), :], adj_scratch, sem_a
+            )
+            cp.start()
+            cp.wait()
+
+        return adj_scratch[0, :]
+
+    def fetch_tile(t, tile_ids, active):
+        @pl.when(active)
+        def _():
+            def load_row(j, _):
+                idx = jnp.maximum(tile_ids[j], 0)
+                cp = pltpu.make_async_copy(
+                    codes_ref.at[pl.ds(idx, 1), :],
+                    x_scratch.at[pl.ds(j, 1), :],
+                    sem_v,
+                )
+                cp.start()
+                cp.wait()
+                return 0
+
+            lax.fori_loop(0, tile_k, load_row, 0)
+
+        return x_scratch[...].astype(jnp.float32)
+
+    c = (
+        bi_ref[0, :], bd_ref[0, :], be_ref[0, :], seen_ref[0, :],
+        vi_ref[0, :], vd_ref[0, :], c_ref[0, 0], c_ref[0, 1], c_ref[0, 2],
+    )
+    for _ in range(h):
+        c = _lane_hop(metric, l, r, mv, n_cap, tile_k, fetch_adj,
+                      fetch_tile, norms, nav_words, ret_words, q, c,
+                      scales=scales)
+
+    bi, bd, be, seen, vi, vd, n_vis, n_comps, n_hops = c
+    bi_out[0, :] = bi
+    bd_out[0, :] = bd
+    be_out[0, :] = be
+    seen_out[0, :] = seen
+    vi_out[0, :] = vi
+    vd_out[0, :] = vd
+    c_out[0, :] = jnp.stack([n_vis, n_comps, n_hops])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "h", "tile_k", "interpret")
+)
+def beam_hop_fused_q(
+    queries, beam_ids, beam_dists, beam_exp, seen, vis_ids, vis_dists,
+    n_vis, n_comps, n_hops, adj,
+    codes,       # i8[n_cap, D]  (HBM resident) int8 code table
+    scales,      # f32[n_cap]  per-row dequantization scales
+    qnorms,      # f32[n_cap]  cached squared dequantized-row norms
+    nav_words, ret_words,
+    *,
+    metric: str = "l2",
+    h: int = 4,
+    tile_k: int = 64,
+    interpret: bool = True,
+):
+    """``beam_hop_fused`` over the quantized memory tier: neighbour rows
+    gather from the int8 code table (~4x less DMA traffic per hop) and
+    dequantize in-register.  Same carry in, same carry out."""
+    b, l = beam_ids.shape
+    n_cap, r = adj.shape
+    d = codes.shape[1]
+    w = seen.shape[1]
+    mv = vis_ids.shape[1]
+    tile_k = min(tile_k, max(r, 1))
+    counters = jnp.stack([n_vis, n_comps, n_hops], axis=1).astype(jnp.int32)
+
+    lane = lambda i: (i, 0)
+    bcast = lambda i: (0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lane),       # queries
+            pl.BlockSpec((1, l), lane),       # beam_ids
+            pl.BlockSpec((1, l), lane),       # beam_dists
+            pl.BlockSpec((1, l), lane),       # beam_exp
+            pl.BlockSpec((1, w), lane),       # seen
+            pl.BlockSpec((1, mv), lane),      # vis_ids
+            pl.BlockSpec((1, mv), lane),      # vis_dists
+            pl.BlockSpec((1, 3), lane),       # counters
+            pl.BlockSpec((1, w), bcast),      # nav_words
+            pl.BlockSpec((1, w), bcast),      # ret_words
+            pl.BlockSpec((1, n_cap), bcast),  # qnorms
+            pl.BlockSpec((1, n_cap), bcast),  # scales
+            pl.BlockSpec(memory_space=_ANY),  # adj
+            pl.BlockSpec(memory_space=_ANY),  # codes
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l), lane),
+            pl.BlockSpec((1, l), lane),
+            pl.BlockSpec((1, l), lane),
+            pl.BlockSpec((1, w), lane),
+            pl.BlockSpec((1, mv), lane),
+            pl.BlockSpec((1, mv), lane),
+            pl.BlockSpec((1, 3), lane),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, r), jnp.int32),
+            pltpu.VMEM((tile_k, d), jnp.int8),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel_q, metric, h, l, r, mv, n_cap, w, tile_k, d
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+            jax.ShapeDtypeStruct((b, l), jnp.float32),
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+            jax.ShapeDtypeStruct((b, w), jnp.uint32),
+            jax.ShapeDtypeStruct((b, mv), jnp.int32),
+            jax.ShapeDtypeStruct((b, mv), jnp.float32),
+            jax.ShapeDtypeStruct((b, 3), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        queries.astype(jnp.float32), beam_ids, beam_dists,
+        beam_exp.astype(jnp.int32), seen, vis_ids, vis_dists, counters,
+        nav_words[None, :], ret_words[None, :],
+        qnorms[None, :].astype(jnp.float32),
+        scales[None, :].astype(jnp.float32), adj, codes,
+    )
+    bi, bd, be, seen_o, vi, vd, c = outs
+    return bi, bd, be, seen_o, vi, vd, c[:, 0], c[:, 1], c[:, 2]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "h", "tile_k"))
+def beam_hop_ref_q(
+    queries, beam_ids, beam_dists, beam_exp, seen, vis_ids, vis_dists,
+    n_vis, n_comps, n_hops, adj, codes, scales, qnorms, nav_words, ret_words,
+    *, metric: str = "l2", h: int = 4, tile_k: int = 64,
+):
+    """Pure-jnp oracle for ``beam_hop_fused_q``: shared ``_lane_hop`` with
+    plain int8 gathers, scales applied to the dot product."""
+    n_cap, r = adj.shape
+    l = beam_ids.shape[1]
+    mv = vis_ids.shape[1]
+    tile_k = min(tile_k, max(r, 1))
+
+    def lane(q, bi, bd, be, sn, vi, vd, nv, nc, nh):
+        fetch_adj = lambda sv, active: adj[sv]
+        fetch_tile = lambda t, tile_ids, active: (
+            codes[jnp.maximum(tile_ids, 0)].astype(jnp.float32)
+        )
+        c = (bi, bd, be, sn, vi, vd, nv, nc, nh)
+        for _ in range(h):
+            c = _lane_hop(metric, l, r, mv, n_cap, tile_k, fetch_adj,
+                          fetch_tile, qnorms.astype(jnp.float32),
+                          nav_words, ret_words, q, c,
+                          scales=scales.astype(jnp.float32))
+        return c
+
+    return jax.vmap(lane)(
+        queries.astype(jnp.float32), beam_ids, beam_dists,
+        beam_exp.astype(jnp.int32), seen, vis_ids, vis_dists,
+        n_vis.astype(jnp.int32), n_comps.astype(jnp.int32),
+        n_hops.astype(jnp.int32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "h", "tile_k"))

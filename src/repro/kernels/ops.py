@@ -12,8 +12,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .beam_hop import beam_hop_fused
+from .beam_hop import beam_hop_fused, beam_hop_fused_q
 from .gather_distance import gather_distance, gather_distance_batched
+from .quant_gather import gather_distance_batched_q
 from .topk_score import topk_score
 from . import ref
 
@@ -44,6 +45,19 @@ def gather_distances_batched(ids, queries, vectors, norms=None, *,
     )
 
 
+def gather_distances_batched_q(ids, queries, codes, scales, qnorms, *,
+                               metric="l2", interpret=None):
+    """Quantized-tier gather+distance over a (B, K) id tile: int8 rows
+    gathered from the code table, dequantized in-register (the batched
+    engine's ``dists_to_ids_batched_q`` on the pallas backend)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return gather_distance_batched_q(
+        ids, queries, codes, scales, qnorms, metric=metric,
+        interpret=interpret,
+    )
+
+
 def beam_hop(queries, beam_ids, beam_dists, beam_exp, seen, vis_ids,
              vis_dists, n_vis, n_comps, n_hops, adj, vectors, norms,
              nav_words, ret_words, *, metric="l2", h=4, interpret=None):
@@ -58,6 +72,22 @@ def beam_hop(queries, beam_ids, beam_dists, beam_exp, seen, vis_ids,
         queries, beam_ids, beam_dists, beam_exp, seen, vis_ids, vis_dists,
         n_vis, n_comps, n_hops, adj, vectors, norms, nav_words, ret_words,
         metric=metric, h=h, interpret=interpret,
+    )
+
+
+def beam_hop_q(queries, beam_ids, beam_dists, beam_exp, seen, vis_ids,
+               vis_dists, n_vis, n_comps, n_hops, adj, codes, scales,
+               qnorms, nav_words, ret_words, *, metric="l2", h=4,
+               interpret=None):
+    """Fused multi-hop beam super-step over the quantized memory tier:
+    neighbour rows gather from the int8 code table and dequantize
+    in-register (the pallas engine's ``beam_superstep_q``)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return beam_hop_fused_q(
+        queries, beam_ids, beam_dists, beam_exp, seen, vis_ids, vis_dists,
+        n_vis, n_comps, n_hops, adj, codes, scales, qnorms, nav_words,
+        ret_words, metric=metric, h=h, interpret=interpret,
     )
 
 
@@ -116,8 +146,10 @@ def make_kernel_distance_fn(*, interpret=None):
 
 __all__ = [
     "beam_hop",
+    "beam_hop_q",
     "gather_distances",
     "gather_distances_batched",
+    "gather_distances_batched_q",
     "topk_search",
     "make_kernel_distance_fn",
     "ref",

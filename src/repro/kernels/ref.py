@@ -25,6 +25,27 @@ def gather_distance_batched_ref(ids, queries, vectors, *, metric: str = "l2"):
     )(queries, ids)
 
 
+def quant_gather_distance_batched_ref(ids, queries, codes, scales, qnorms,
+                                      *, metric: str = "l2"):
+    """f32[B, K] quantized-tier distances (the ``quant_gather`` oracle):
+    raw int8 dot accumulated in f32, per-row scale applied to the product,
+    cached dequantized-row qnorms as the l2 norm term — the op-order
+    contract of ``core/quant.py::quant_dists_to_ids_batched``."""
+    n = codes.shape[0]
+
+    def one(q, row):
+        safe = jnp.clip(row, 0, n - 1)
+        raw = codes[safe].astype(jnp.float32) @ q
+        prod = raw * scales[safe]
+        if metric == "l2":
+            d = jnp.dot(q, q) + qnorms[safe] - 2.0 * prod
+        else:
+            d = -prod
+        return jnp.where(row >= 0, d, jnp.inf)
+
+    return jax.vmap(one)(queries.astype(jnp.float32), ids)
+
+
 def topk_score_ref(queries, vectors, norms, bias=None, *, k: int,
                    metric: str = "l2"):
     """(dists f32[B, k], ids i32[B, k]) ascending by distance.  ``bias``:

@@ -1,0 +1,401 @@
+"""Quantized memory tier + online capacity growth.
+
+Two contracts under test:
+
+  * **int8 traversal, exact answers** (core/quant.py, the ``_q`` engine
+    surfaces): the hop loop runs on per-row symmetric int8 codes, every
+    engine (jnp / pallas interpret / ref) computes the SAME dequantized
+    distances (raw int8-dot in f32 first, per-row scale second — the
+    op-order contract), and the returned top-k distances are exactly the
+    f32 distances (search rescored the beam before selecting).  Bitwise
+    rescore equality is pinned for the jnp and pallas engines, whose
+    in-search rescore consumes the cached ``GraphState.norms`` plus a plain
+    dot — stable across XLA fusion contexts; the ref engine recomputes row
+    norms inline, which fuses differently inside the big search program
+    than in a standalone call, so it gets a tight allclose instead.
+
+  * **growth determinism** (core/grow.py): ``grow_index`` is a pure
+    function of the input state, fresh slots pop in ascending order before
+    any surviving free entry, and a checkpoint restored into a LARGER
+    capacity bucket replays an update stream bit-identically to the
+    in-memory handle that grew online (crash recovery across a growth
+    boundary).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import (
+    ANNConfig,
+    CheckpointMismatchError,
+    StreamingIndex,
+    dequantize_rows,
+    get_backend,
+    grow_index,
+    init_quant_store,
+    make_dataset,
+    next_capacity,
+    quantize_rows,
+    restore_index,
+    save_index,
+)
+from repro.core.api import KIND_INSERT, make_update_batch
+from repro.core.quant import quant_write_rows
+
+BACKENDS = ("jnp", "pallas", "ref")
+DIM = 20  # deliberately not a multiple of 128 (nor of 8)
+
+
+def _cfg(metric, backend="jnp", *, quantized=True, n_cap=256):
+    return ANNConfig(
+        dim=DIM, n_cap=n_cap, r=8, l_build=16, l_search=16, l_delete=16,
+        k_delete=8, n_copies=2, alpha=1.2, metric=metric, backend=backend,
+        quantized=quantized,
+    )
+
+
+def _built_index(metric, backend="jnp", *, quantized=True):
+    data, queries = make_dataset(200, DIM, metric, n_queries=6, seed=3)
+    idx = StreamingIndex(
+        _cfg(metric, backend, quantized=quantized), max_external_id=400,
+        auto_grow=False,
+    )
+    idx.insert(np.arange(200), data)
+    # dead slots: tombstoned rows must stay masked on the quantized path too
+    idx.delete(np.arange(0, 30))
+    return idx, data, queries
+
+
+# -- codes ------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_property():
+    rng = np.random.default_rng(0)
+    xs = np.concatenate([
+        rng.normal(size=(50, DIM)) * 10.0,
+        rng.normal(size=(50, DIM)) * 1e-3,
+        np.zeros((2, DIM)),
+    ]).astype(np.float32)
+    codes, scale = quantize_rows(jnp.asarray(xs))
+    assert codes.dtype == jnp.int8
+    # symmetric range: clipping at +-127, never -128
+    assert int(jnp.min(codes)) >= -127
+    # zero rows take the neutral scale (no 0/0), and round-trip exactly
+    np.testing.assert_array_equal(np.asarray(scale)[-2:], 1.0)
+    deq = np.asarray(dequantize_rows(codes, scale))
+    np.testing.assert_array_equal(deq[-2:], 0.0)
+    # per-element round-trip error is at most half a quantization step
+    err = np.abs(deq - xs)
+    assert np.all(err <= np.asarray(scale)[:, None] * 0.5 + 1e-7), err.max()
+
+
+def test_quant_store_write_matches_full_quantize():
+    rng = np.random.default_rng(1)
+    xs = rng.normal(size=(8, DIM)).astype(np.float32)
+    q = init_quant_store(32, DIM)
+    q = quant_write_rows(q, jnp.arange(8), jnp.asarray(xs))
+    codes, scale = quantize_rows(jnp.asarray(xs))
+    np.testing.assert_array_equal(np.asarray(q.codes[:8]), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(q.scale[:8]), np.asarray(scale))
+    # qnorms cache squared norms of the DEQUANTIZED rows (what the l2
+    # engine consumes), not of the f32 originals
+    deq = dequantize_rows(codes, scale)
+    np.testing.assert_array_equal(
+        np.asarray(q.qnorms[:8]), np.asarray(jnp.sum(deq * deq, axis=1))
+    )
+
+
+# -- engine parity ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_quant_dists_parity(metric):
+    """All three engines agree on quantized distances over a lane mix of
+    live ids, tombstoned ids, INVALID padding and duplicates."""
+    idx, _, queries = _built_index(metric)
+    qs = jnp.asarray(queries[:4])
+    ids = jnp.asarray(np.array([
+        [31, 199, -1, 40, 31, 5, -1, 77],    # dups + masked lanes
+        [5, 5, 5, 5, -1, -1, -1, -1],        # tombstoned row (deleted)
+        [120, 63, 199, 198, 197, 196, 64, 65],
+        [-1, -1, -1, -1, -1, -1, -1, -1],    # fully masked
+    ], np.int32))
+    ref = None
+    for name in BACKENDS:
+        cfg = _cfg(metric, name)
+        d = np.asarray(get_backend(name).dists_to_ids_batched_q(
+            idx.state, cfg, qs, ids
+        ))
+        assert np.all(np.isinf(d[np.asarray(ids) < 0])), name
+        assert np.all(np.isfinite(d[np.asarray(ids) >= 0])), name
+        if ref is None:
+            ref = d
+        else:
+            np.testing.assert_allclose(d, ref, rtol=2e-5, atol=2e-5,
+                                       err_msg=name)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_quantized_search_parity(metric):
+    """End-to-end quantized search: every backend returns the same ids
+    (pallas runs the fused int8 multi-hop kernel, jnp/ref the unfused
+    ``dists_to_ids_batched_q`` hop body)."""
+    results = {}
+    for name in BACKENDS:
+        idx, _, queries = _built_index(metric, name)
+        ids, dists, _ = idx.search(queries, k=5)
+        results[name] = (np.asarray(ids), np.asarray(dists))
+    np.testing.assert_array_equal(results["pallas"][0], results["jnp"][0])
+    np.testing.assert_array_equal(results["ref"][0], results["jnp"][0])
+    for name in ("pallas", "ref"):
+        np.testing.assert_allclose(
+            results[name][1], results["jnp"][1], rtol=2e-5, atol=2e-5,
+            err_msg=name,
+        )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rescore_exactness(backend):
+    """The returned top-k distances are EXACT f32 distances: recomputing
+    ``dists_to_ids_batched`` on the returned slots reproduces them — bit
+    for bit on jnp/pallas (their rescore consumes cached norms + a plain
+    dot, stable across fusion contexts); the ref engine recomputes norms
+    inline, which XLA fuses differently inside the search program, so it
+    is pinned to a tight tolerance instead."""
+    idx, _, queries = _built_index("l2", backend)
+    qs = jnp.asarray(queries)
+    ext, dists, slots = idx.search(qs, k=5)
+    oracle = np.asarray(get_backend(backend).dists_to_ids_batched(
+        idx.state, idx.cfg, qs, jnp.asarray(slots)
+    ))
+    got = np.asarray(dists)
+    if backend == "ref":
+        np.testing.assert_allclose(got, oracle, rtol=2e-5, atol=2e-5)
+    else:
+        np.testing.assert_array_equal(got, oracle)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_quantized_recall_close_to_f32(metric):
+    """int8 traversal + exact rescore keeps recall within 0.02 of the
+    f32-only path at matched beam width (the ISSUE's acceptance gate, at
+    test scale)."""
+    recalls = {}
+    for quantized in (False, True):
+        idx, _, queries = _built_index("l2", quantized=quantized)
+        recalls[quantized] = idx.recall(queries, k=10)
+    assert recalls[True] >= recalls[False] - 0.02, recalls
+
+
+def test_unquantized_state_has_no_quant_leaf():
+    """quantized=False keeps the pre-tier pytree: quant is None (empty
+    node), so checkpoints and compiled programs are layout-identical to
+    the seed."""
+    idx, _, _ = _built_index("l2", quantized=False)
+    assert idx.state.quant is None
+    leaves_q = jax.tree.leaves(_built_index("l2")[0].istate)
+    leaves = jax.tree.leaves(idx.istate)
+    assert len(leaves_q) == len(leaves) + 3  # codes, scale, qnorms
+
+
+# -- growth ----------------------------------------------------------------
+
+
+def test_next_capacity_walks_power_of_two_buckets():
+    assert next_capacity(10, 64) == 64
+    assert next_capacity(60, 64) == 128          # > high water of 64
+    assert next_capacity(1000, 64) == 2048       # 0.9 * 1024 < 1000
+    assert next_capacity(90, 100) == 128         # snaps onto the grid
+
+
+def test_grow_rejects_shrink():
+    cfg = _cfg("l2", quantized=False, n_cap=64)
+    idx = StreamingIndex(cfg, max_external_id=256)
+    with pytest.raises(ValueError, match="shrink"):
+        grow_index(idx.istate, cfg, 32)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_grow_preserves_live_graph(quantized):
+    """Growth pads, never perturbs: every live row's vectors, codes,
+    adjacency and id-map entries are bitwise unchanged."""
+    data, queries = make_dataset(100, DIM, "l2", n_queries=4, seed=5)
+    cfg = _cfg("l2", quantized=quantized, n_cap=128)
+    idx = StreamingIndex(cfg, max_external_id=512, auto_grow=False)
+    idx.insert(np.arange(100), data)
+    state, new_cfg = grow_index(idx.istate, idx.cfg, 512)
+    assert new_cfg.n_cap == 512
+    g0, g1 = idx.istate.graph, state.graph
+    np.testing.assert_array_equal(np.asarray(g1.vectors[:128]),
+                                  np.asarray(g0.vectors))
+    np.testing.assert_array_equal(np.asarray(g1.adj[:128]),
+                                  np.asarray(g0.adj))
+    np.testing.assert_array_equal(np.asarray(g1.active[:128]),
+                                  np.asarray(g0.active))
+    assert not np.asarray(g1.active[128:]).any()
+    np.testing.assert_array_equal(np.asarray(state.slot2ext[:128]),
+                                  np.asarray(idx.istate.slot2ext))
+    np.testing.assert_array_equal(np.asarray(state.slot2ext[128:]), -1)
+    if quantized:
+        np.testing.assert_array_equal(np.asarray(g1.quant.codes[:128]),
+                                      np.asarray(g0.quant.codes))
+        np.testing.assert_array_equal(np.asarray(g1.quant.scale[128:]), 1.0)
+    # counters and the entry point ride through untouched
+    assert int(g1.n_active) == int(g0.n_active)
+    assert int(state.n_inserts) == int(idx.istate.n_inserts)
+
+
+def test_grow_free_stack_pops_fresh_slots_ascending():
+    """The replay contract: after a grow, allocation pops the fresh slots
+    n_cap, n_cap+1, ... FIRST, then the surviving free entries — a pure
+    function of the input state (growing twice gives identical stacks)."""
+    data, _ = make_dataset(50, DIM, "l2", n_queries=1, seed=7)
+    cfg = _cfg("l2", quantized=False, n_cap=64)
+    idx = StreamingIndex(cfg, max_external_id=256, auto_grow=False)
+    idx.insert(np.arange(50), data)
+    s1, _ = grow_index(idx.istate, idx.cfg, 128)
+    s2, _ = grow_index(idx.istate, idx.cfg, 128)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    g = s1.graph
+    top = int(g.free_top)
+    stack = np.asarray(g.free_stack)
+    # the stack pops from the top: the 64 fresh slots sit above the old
+    # entries, in ascending pop order (64 first)
+    np.testing.assert_array_equal(stack[top - 64:top], np.arange(127, 63, -1))
+    # ...and the next inserts really do land on 64, 65, ...
+    idx.istate, idx.cfg = s1, dataclasses.replace(idx.cfg, n_cap=128)
+    more = np.random.default_rng(8).normal(size=(3, DIM)).astype(np.float32)
+    idx.insert(np.arange(200, 203), more)
+    slots = np.asarray(idx.istate.ext2slot)[200:203]
+    np.testing.assert_array_equal(slots, [64, 65, 66])
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_stream_grows_through_buckets(quantized):
+    """A stream from a small bucket grows through >= 2 capacity buckets
+    with intact id maps and NO recall cliff vs an index born large."""
+    data, queries = make_dataset(400, DIM, "l2", n_queries=8, seed=11)
+    cfg = _cfg("l2", quantized=quantized, n_cap=64)
+    idx = StreamingIndex(cfg, max_external_id=2048)
+    caps = set()
+    for t in range(8):
+        idx.insert(np.arange(t * 50, (t + 1) * 50), data[t * 50:(t + 1) * 50])
+        caps.add(idx.cfg.n_cap)
+    assert len(caps) >= 3, caps  # 64 -> ... crossed >= 2 bucket boundaries
+    assert idx.n_active == 400
+    # id-map invariants: every external id maps to a slot that maps back
+    e2s = np.asarray(idx.istate.ext2slot)[:400]
+    assert (e2s >= 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(idx.istate.slot2ext)[e2s], np.arange(400)
+    )
+    # no recall cliff vs a control born in the final bucket
+    ctrl = StreamingIndex(
+        dataclasses.replace(cfg, n_cap=idx.cfg.n_cap), max_external_id=2048,
+    )
+    for t in range(8):
+        ctrl.insert(np.arange(t * 50, (t + 1) * 50),
+                    data[t * 50:(t + 1) * 50])
+    r_grown, r_ctrl = idx.recall(queries, k=10), ctrl.recall(queries, k=10)
+    assert r_grown >= r_ctrl - 0.02, (r_grown, r_ctrl)
+
+
+def test_segment_stream_grows_up_front():
+    """apply_segments provisions the whole stream's insert demand before
+    planning, so every segment compiles against one bucket."""
+    data, _ = make_dataset(256, DIM, "l2", n_queries=1, seed=13)
+    cfg = _cfg("l2", quantized=False, n_cap=64)
+    idx = StreamingIndex(cfg, max_external_id=1024)
+    steps = [
+        make_update_batch(
+            np.full(64, KIND_INSERT), np.arange(t * 64, (t + 1) * 64),
+            data[t * 64:(t + 1) * 64],
+        )
+        for t in range(4)
+    ]
+    idx.apply_segments(steps)
+    assert idx.cfg.n_cap >= 512  # 256 inserts need the 512 bucket (0.9*256<256)
+    assert idx.n_active == 256
+
+
+def test_auto_grow_off_keeps_capacity_contract():
+    data, _ = make_dataset(100, DIM, "l2", n_queries=1, seed=17)
+    cfg = _cfg("l2", quantized=False, n_cap=64)
+    idx = StreamingIndex(cfg, max_external_id=1024, auto_grow=False)
+    with pytest.raises(RuntimeError, match="capacity exhausted"):
+        idx.insert(np.arange(100), data)
+
+
+# -- durability across growth ----------------------------------------------
+
+
+def test_restore_into_larger_bucket_bitwise(tmp_path):
+    """grow(restore(save(s))) == grow(s): a checkpoint written in a small
+    bucket restores into a larger caller bucket bit-identically."""
+    data, _ = make_dataset(150, DIM, "l2", n_queries=1, seed=19)
+    cfg = _cfg("l2", n_cap=256)
+    idx = StreamingIndex(cfg, max_external_id=512, auto_grow=False)
+    idx.insert(np.arange(150), data)
+    mgr = CheckpointManager(tmp_path)
+    save_index(mgr, 0, idx.istate, idx.cfg)
+    big = dataclasses.replace(idx.cfg, n_cap=1024)
+    _, restored, _ = restore_index(mgr, big)
+    grown, _ = grow_index(idx.istate, idx.cfg, 1024)
+    for a, b in zip(jax.tree.leaves(grown), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replay_bit_identical_across_growth(tmp_path):
+    """Crash recovery across a growth boundary: checkpoint BEFORE the
+    growth, then replay the same stream (a) on the live handle that grows
+    online and (b) on a handle restored straight into the final bucket —
+    final states must be bitwise identical (free-stack determinism)."""
+    data, _ = make_dataset(300, DIM, "l2", n_queries=1, seed=23)
+    cfg = _cfg("l2", quantized=False, n_cap=128)
+    idx = StreamingIndex(cfg, max_external_id=1024)
+    idx.insert(np.arange(100), data[:100])
+    assert idx.cfg.n_cap == 128  # not yet grown
+    mgr = CheckpointManager(tmp_path)
+    save_index(mgr, 0, idx.istate, idx.cfg)
+
+    steps = [
+        make_update_batch(
+            np.full(50, KIND_INSERT), np.arange(100 + t * 50, 150 + t * 50),
+            data[100 + t * 50:150 + t * 50],
+        )
+        for t in range(4)
+    ]
+    idx.apply_segments(steps)        # grows online mid-stream
+    assert idx.cfg.n_cap > 128
+
+    big = dataclasses.replace(cfg, n_cap=idx.cfg.n_cap)
+    _, restored, _ = restore_index(mgr, big)   # grown at restore time
+    idx2 = StreamingIndex(big, max_external_id=1024)
+    idx2.istate = jax.tree.map(jnp.asarray, restored)
+    idx2.apply_segments([
+        make_update_batch(
+            np.full(50, KIND_INSERT), np.arange(100 + t * 50, 150 + t * 50),
+            data[100 + t * 50:150 + t * 50],
+        )
+        for t in range(4)
+    ])
+    for a, b in zip(jax.tree.leaves(idx.istate), jax.tree.leaves(idx2.istate)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_shrink_is_typed_mismatch(tmp_path):
+    data, _ = make_dataset(20, DIM, "l2", n_queries=1, seed=29)
+    cfg = _cfg("l2", n_cap=256)
+    idx = StreamingIndex(cfg, max_external_id=512, auto_grow=False)
+    idx.insert(np.arange(20), data)
+    mgr = CheckpointManager(tmp_path)
+    save_index(mgr, 0, idx.istate, idx.cfg)
+    with pytest.raises(CheckpointMismatchError, match="exceeds"):
+        restore_index(mgr, dataclasses.replace(idx.cfg, n_cap=128))
+    with pytest.raises(CheckpointMismatchError, match="quantized"):
+        restore_index(mgr, dataclasses.replace(idx.cfg, quantized=False))

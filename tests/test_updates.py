@@ -20,7 +20,9 @@ def check_invariants(idx: StreamingIndex):
     free_top = int(st_.free_top)
     n_active = int(st_.n_active)
     n_pending = int(st_.n_pending)
-    n_cap = CFG.n_cap
+    # Capacity may have grown past CFG.n_cap (auto_grow snaps onto the
+    # next power-of-two bucket at the high-water mark) — read it live.
+    n_cap = adj.shape[0]
 
     # status masks are disjoint
     assert not np.any(active & tomb)
