@@ -1,13 +1,33 @@
-"""Table 1: IP-DiskANN vs FreshDiskANN vs HNSW across runbooks
-(high-recall regime) — recall@10 + insertion/deletion/search time."""
+"""Table 1: the update-policy grid — IP-DiskANN vs FreshDiskANN vs the
+localized-repair policy vs HNSW, across runbooks (high-recall regime).
+
+Every cell replays the SAME runbook through the SAME ``run_runbook``
+harness (the HNSW baseline rides ``baseline="hnsw"``), so rows are
+comparable point for point: recall-over-time at a shared eval cadence,
+update throughput from the serving counters, and — for the graph
+policies — repair-edge writes per delete measured as a host adjacency
+diff around an instrumented delete stream.
+
+Results merge into ``BENCH_update.json`` under the ``"policies"`` key
+(shard_bench owns ``"shard"``).  ``--smoke`` shrinks sizes and gates:
+
+  * the localized policy's avg recall within 0.05 of ip at matched l;
+  * no policy's final-window recall below 0.80 on the smoke runbook.
+
+Usage: python -m benchmarks.table1_runbooks [--smoke] [--out BENCH_update.json]
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 from typing import List
 
 import numpy as np
 
 from .common import FULL, Row, ann_params, scale
 
+POLICIES = ("ip", "fresh", "local")
 
 RUNBOOKS = [
     # (name, kind, kwargs) — synthetic stand-ins for the paper's datasets:
@@ -22,72 +42,184 @@ RUNBOOKS = [
 ]
 
 
-def _run_mode(rb, mode: str, regime: str = "high"):
+def _n_updates(rb) -> int:
+    return sum(len(s.insert_ids) + len(s.delete_ids) for s in rb.steps)
+
+
+def _run_policy(rb, mode: str, regime: str = "high", eval_every: int = 4):
+    """One grid cell: replay ``rb`` under ``mode``, return a JSON-ready
+    summary with the recall-over-time curve."""
     from repro.core import StreamingIndex, run_runbook
 
     cfg = ann_params(regime, rb.data.shape[1],
                      int(rb.max_active * 1.6) + 64, rb.metric)
     idx = StreamingIndex(cfg, mode=mode, max_external_id=len(rb.data) + 1)
-    rep = run_runbook(idx, rb, k=10, eval_every=4)
+    rep = run_runbook(idx, rb, k=10, eval_every=eval_every)
     c = idx.counters
-    return rep, c
+    update_s = c.insert_s + c.delete_s + c.segment_s
+    cell = {
+        "mode": mode,
+        "l": cfg.l_build,
+        "r": cfg.r,
+        "avg_recall@10": round(rep.avg_recall, 4),
+        "final_recall@10": round(rep.steps[-1].recall, 4) if rep.steps
+        else float("nan"),
+        "recall_over_time": [
+            {"step": m.step, "n_active": m.n_active,
+             "recall": round(m.recall, 4)}
+            for m in rep.steps
+        ],
+        "updates_per_s": round(_n_updates(rb) / max(update_s, 1e-9), 1),
+        "insert_s": round(c.insert_s, 3),
+        "delete_s": round(c.delete_s, 3),
+        "search_s": round(c.search_s, 3),
+        "n_consolidations": c.n_consolidations,
+    }
+    return cell
 
 
-def _run_hnsw(rb, regime: str = "high"):
+def _run_hnsw(rb, regime: str = "high", eval_every: int = 4):
+    """The §4 comparison system through the SAME harness."""
+    from repro.core import run_runbook
     from repro.core.hnsw import HNSWConfig, HNSWIndex
-    from repro.core import recall_at_k
 
     m = (48 if regime == "high" else 24) if FULL else 12
     ef = (128 if regime == "high" else 64) if FULL else 32
-    cfg = HNSWConfig(dim=rb.data.shape[1], n_cap=int(rb.max_active * 1.6) + 64,
+    cfg = HNSWConfig(dim=rb.data.shape[1],
+                     n_cap=int(rb.max_active * 1.6) + 64,
                      m=m, ef_construction=ef, ef_search=ef, max_level=3)
     idx = HNSWIndex(cfg, max_external_id=len(rb.data) + 1)
-    recalls = []
-    for t, step in enumerate(rb.steps):
-        if len(step.insert_ids):
-            idx.insert(step.insert_ids, rb.data[step.insert_ids])
-        if len(step.delete_ids):
-            idx.delete(step.delete_ids)
-        if t % 4 == 0 and idx.n_active > 10 and t >= rb.eval_from:
-            recalls.append(idx.recall(rb.queries, k=10))
-    return float(np.mean(recalls)) if recalls else float("nan"), idx
+    rep = run_runbook(idx, rb, k=10, eval_every=eval_every, baseline="hnsw")
+    c = idx.counters
+    return {
+        "mode": "hnsw",
+        "m": cfg.m,
+        "ef": cfg.ef_search,
+        "avg_recall@10": round(rep.avg_recall, 4),
+        "final_recall@10": round(rep.steps[-1].recall, 4) if rep.steps
+        else float("nan"),
+        "recall_over_time": [
+            {"step": m_.step, "n_active": m_.n_active,
+             "recall": round(m_.recall, 4)}
+            for m_ in rep.steps
+        ],
+        "updates_per_s": round(
+            _n_updates(rb) / max(c.insert_s + c.delete_s, 1e-9), 1),
+        "insert_s": round(c.insert_s, 3),
+        "search_s": round(c.search_s, 3),
+    }
 
 
-def run() -> List[Row]:
+def _repair_writes_per_delete(mode: str, dim: int = 32, n: int = 400,
+                              n_del: int = 120, seed: int = 9):
+    """Host adjacency diff around an instrumented delete stream: how many
+    edge slots does one delete rewrite under each policy?  ip repairs the
+    visited in-neighbourhood in place, fresh defers everything to the
+    consolidation sweep (counted here too — that IS its repair), local
+    rewrites only the bounded in-neighbourhood it reconnects."""
+    from repro.core import StreamingIndex, make_dataset
+
+    cfg = ann_params("high", dim, n + 64, "l2")
+    data, _ = make_dataset(n, dim, "l2", n_queries=8, seed=seed)
+    idx = StreamingIndex(cfg, mode=mode, max_external_id=n + 1)
+    idx.insert(np.arange(n), data)
+    before = np.asarray(idx.istate.graph.adj).copy()
+    idx.delete(np.arange(n_del))
+    idx.maybe_consolidate(force=True)  # fresh: count the deferred sweep
+    after = np.asarray(idx.istate.graph.adj)
+    writes = int((before != after).sum())
+    return {"mode": mode, "n_deletes": n_del,
+            "edge_writes_per_delete": round(writes / n_del, 2)}
+
+
+def run(out_path: str = "BENCH_update.json", smoke: bool = False) -> List[Row]:
     from repro.core import make_runbook
 
-    n = scale(1600, 10_000)
-    t_max = scale(24, 200)
+    if smoke:
+        n, t_max, eval_every = 900, 16, 4
+        runbooks = RUNBOOKS[:1]
+    else:
+        n = scale(1600, 10_000)
+        t_max = scale(24, 200)
+        eval_every = 4
+        runbooks = RUNBOOKS
+
+    report = {"regime": "high", "smoke": smoke, "runbooks": {}}
     rows: List[Row] = []
-    for name, kind, kw in RUNBOOKS:
+    for name, kind, kw in runbooks:
         extra = dict(kw)
         if kind != "clustered":
             extra["t_max"] = t_max
         rb = make_runbook(kind, n=n, seed=1, **extra)
-        n_updates = sum(
-            len(s.insert_ids) + len(s.delete_ids) for s in rb.steps
-        )
-        for mode in ("ip", "fresh"):
-            rep, c = _run_mode(rb, mode)
-            algo = "IP-DiskANN" if mode == "ip" else "FreshDiskANN"
+        cells = {}
+        for mode in POLICIES:
+            cell = _run_policy(rb, mode, eval_every=eval_every)
+            cells[mode] = cell
+            algo = {"ip": "IP-DiskANN", "fresh": "FreshDiskANN",
+                    "local": "LocalRepair"}[mode]
             rows.append(Row(
                 f"table1.{name}.{algo}",
-                1e6 * (c.insert_s + c.delete_s) / max(n_updates, 1),
-                f"recall@10={rep.avg_recall:.3f};insert_s={c.insert_s:.2f};"
-                f"delete_s={c.delete_s:.2f};search_s={c.search_s:.2f};"
-                f"consolidations={c.n_consolidations}",
+                1e6 / max(cell["updates_per_s"], 1e-9),  # us per update
+                f"recall@10={cell['avg_recall@10']:.3f};"
+                f"final={cell['final_recall@10']:.3f};"
+                f"updates_per_s={cell['updates_per_s']:.0f};"
+                f"consolidations={cell['n_consolidations']}",
             ))
-        if name.endswith("SlidingWindow"):  # paper benchmarks HNSW on subset
-            r_hnsw, idx = _run_hnsw(rb)
-            rows.append(Row(
-                f"table1.{name}.HNSW",
-                1e6 * idx.insert_s / max(n_updates, 1),
-                f"recall@10={r_hnsw:.3f};insert_s={idx.insert_s:.2f};"
-                f"search_s={idx.search_s:.2f}",
-            ))
+        cells["hnsw"] = _run_hnsw(rb, eval_every=eval_every)
+        rows.append(Row(
+            f"table1.{name}.HNSW",
+            1e6 / max(cells["hnsw"]["updates_per_s"], 1e-9),
+            f"recall@10={cells['hnsw']['avg_recall@10']:.3f};"
+            f"final={cells['hnsw']['final_recall@10']:.3f};"
+            f"updates_per_s={cells['hnsw']['updates_per_s']:.0f}",
+        ))
+        report["runbooks"][name] = cells
+
+    report["repair_edge_writes"] = [
+        _repair_writes_per_delete(mode) for mode in POLICIES
+    ]
+    for rw in report["repair_edge_writes"]:
+        rows.append(Row(
+            f"table1.repair_writes.{rw['mode']}",
+            rw["edge_writes_per_delete"],
+            f"edge_writes_per_delete={rw['edge_writes_per_delete']}",
+        ))
+
+    # merge under the update bench's report file: one JSON carries the
+    # whole update story (per-op, segment, sharded, policy grid)
+    merged = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            merged = json.load(f)
+    merged["policies"] = report
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=2)
+    rows.append(Row("table1.report", 0.0, f"merged={out_path}"))
+
+    if smoke:
+        cells = report["runbooks"][runbooks[0][0]]
+        ip_r = cells["ip"]["avg_recall@10"]
+        local_r = cells["local"]["avg_recall@10"]
+        # matched l by construction: every policy cell shares ann_params
+        assert cells["local"]["l"] == cells["ip"]["l"]
+        assert local_r >= ip_r - 0.05, (
+            f"localized repair fell >0.05 behind ip at matched l: "
+            f"local={local_r:.3f} ip={ip_r:.3f}"
+        )
+        for mode in POLICIES:
+            fr = cells[mode]["final_recall@10"]
+            assert fr >= 0.80, (
+                f"{mode} final-window recall {fr:.3f} < 0.80 on the smoke "
+                f"runbook"
+            )
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small runbook + policy-grid recall gates")
+    ap.add_argument("--out", default="BENCH_update.json")
+    args = ap.parse_args()
+    for r in run(out_path=args.out, smoke=args.smoke):
         print(r.csv())

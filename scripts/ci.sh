@@ -12,10 +12,11 @@ if [ "${CI_FULL:-0}" = "1" ]; then
 fi
 
 echo "== tier-1 tests =="
+# --durations: keep the slowest tests visible so suite growth stays honest
 if [ -n "$marker" ]; then
-    python -m pytest -q -m "$marker"
+    python -m pytest -q -m "$marker" --durations=15
 else
-    python -m pytest -q
+    python -m pytest -q --durations=15
 fi
 
 echo "== perf_ann smoke =="
@@ -41,6 +42,13 @@ echo "== sharded streams: compact vs replicate routing (BENCH_update.json:shard)
 # replicate-and-mask in batched mode (masked lanes pay tile width there)
 # and does not regress the sequential mode past 10% noise slack
 python -m benchmarks.shard_bench --smoke --out BENCH_update.json
+cat BENCH_update.json
+
+echo "== update-policy grid: ip vs fresh vs local vs hnsw (BENCH_update.json:policies) =="
+# --smoke enforces the three-way recall gates on the smoke runbook: the
+# localized-repair policy's avg recall within 0.05 of ip at matched l,
+# and no policy's final-window recall below 0.80
+python -m benchmarks.table1_runbooks --smoke --out BENCH_update.json
 cat BENCH_update.json
 
 echo "== serving front door: open-loop latency under load (BENCH_serve.json) =="

@@ -67,7 +67,7 @@ from .consolidate import (
     light_consolidate,
     light_consolidate_fields,
 )
-from .delete import ip_delete_many, lazy_delete_many
+from .delete import ip_delete_many, lazy_delete_many, local_delete_many
 from .insert import insert_many
 from .search import search_batch
 from .search_batched import next_bucket
@@ -277,6 +277,39 @@ class FreshDiskANNPolicy(UpdatePolicy):
 
     def consolidate(self, graph, cfg):
         return fresh_consolidate(graph, cfg)
+
+
+@register_policy("local")
+class LocalRepairPolicy(UpdatePolicy):
+    """Topology-aware localized repair (arXiv 2503.00402): the delete reads
+    the EXACT in-neighbourhood off the adjacency matrix, removes every
+    in-edge, reconnects a bounded in-neighbour set through the deleted
+    vertex's own out-neighbourhood (``cfg.local_in_cap``; see
+    ``core/delete.py::local_delete``) and releases the slot straight onto
+    the free stack — no search, no quarantine, no consolidation debt.
+
+    The pass is pure device code, so it composes with ``apply_segment``'s
+    scan and donation exactly like ip.  ``device_consolidation`` stays True
+    with the same narrowed Algorithm-6 fields: on a pure-local stream the
+    trigger can never fire (``n_pending`` stays 0 — every delete settles
+    its own repairs), so the cond compiles but costs nothing; the sweep
+    remains as a defensive pass for states inherited from another policy
+    (e.g. a checkpoint written under ip with quarantined slots in flight).
+    """
+
+    device_consolidation = True
+    consolidation_fields = LIGHT_CONSOLIDATE_FIELDS
+
+    def delete_many(self, graph, cfg, ps, *, sequential):
+        # one formulation for both visibility modes: each lane's exact
+        # in-neighbour compare must see the previous lane's repairs
+        return local_delete_many(graph, cfg, ps)
+
+    def consolidate(self, graph, cfg):
+        return light_consolidate(graph, cfg)
+
+    def consolidate_narrow(self, cfg, sub):
+        return light_consolidate_fields(cfg, *sub)
 
 
 # ---------------------------------------------------------------------------

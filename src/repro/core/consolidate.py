@@ -49,6 +49,10 @@ def consolidation_due(state: GraphState, cfg: ANNConfig) -> jax.Array:
 # the cond's operands to this tuple, so the untouched multi-MB leaves
 # (vectors, norms, active, ...) never ride the branch — on CPU a cond
 # copies every carried operand each step even when the branch never fires.
+# The "local" policy also declares these fields: its deletes release slots
+# directly (n_pending stays 0, the trigger never fires on a pure-local
+# stream), so the sweep is purely defensive for states inherited from
+# another policy.
 LIGHT_CONSOLIDATE_FIELDS = (
     "adj", "quarantine", "free_stack", "free_top", "n_pending"
 )

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .backend import BIG, resolve_backend
-from .edges import append_one, remove_target_rows
+from .edges import append_one, remove_target_everywhere, remove_target_rows
 from .search import greedy_search
 from .types import INVALID, ANNConfig, GraphState, clip_ids
 
@@ -143,6 +143,109 @@ def _next_start(st: GraphState, cfg: ANNConfig, p, nout_p):
 def ip_delete_many(state: GraphState, cfg: ANNConfig, ps: jax.Array):
     def step(st, p):
         st, stats = ip_delete(st, cfg, p)
+        return st, stats
+
+    return lax.scan(step, state, ps)
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware localized repair (the "local" policy, arXiv 2503.00402)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def local_delete(state: GraphState, cfg: ANNConfig, p: jax.Array):
+    """Delete slot ``p`` with topology-aware localized repair.
+
+    Where Algorithm 5 approximates the in-neighbourhood by greedy search
+    and quarantines the slot for a later Algorithm-6 sweep, this policy
+    reads the in-neighbourhood straight off the topology and repairs it on
+    the spot:
+
+      1. Exact in-neighbours: one (n_cap, r) compare over the adjacency
+         matrix — no search, no distance computations.
+      2. Remove EVERY edge ``z -> p`` (``remove_target_everywhere``).  The
+         removal is unbounded, so no dangling in-edge can ever survive a
+         delete — which is what lets step 4 skip quarantine entirely.
+      3. Reconnect the first ``resolved_local_in_cap()`` in-neighbours (a
+         static bound, ascending slot order) through the bounded local
+         candidate set around the deleted vertex: each repaired ``z`` gains
+         edges to the ``c`` candidates of ``N_out(p)`` closest to ``x_z``.
+         In-neighbours past the bound just lose one edge — a graph-quality
+         trade, never a correctness one.
+      4. Release the slot DIRECTLY onto the free stack.  There is no
+         quarantine, no pending debt and nothing for a consolidation sweep
+         to do; the slot is reusable by the very next insert lane.
+
+    Distance cost is bounded by ``min(in_degree, local_in_cap) * r`` pairs
+    per delete — independent of ``l_delete`` and of graph size.
+    """
+    sp = clip_ids(p, cfg.n_cap)
+    valid = (p >= 0) & state.active[sp]
+
+    def no_op(st: GraphState):
+        return st, DeleteStats(jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+
+    def do_delete(st: GraphState):
+        b_in = min(cfg.resolved_local_in_cap(), cfg.n_cap)
+        nout_p = st.adj[sp]                      # local candidate set
+
+        # --- exact in-neighbourhood off the topology -----------------------
+        in_rows = jnp.any(st.adj == p, axis=1)
+        in_rows = in_rows.at[sp].set(False)      # no self loops, but be safe
+        n_in = jnp.sum(in_rows).astype(jnp.int32)
+        z_idx = jnp.where(
+            in_rows, jnp.arange(cfg.n_cap, dtype=jnp.int32), cfg.n_cap
+        )
+        z_ids = jnp.sort(z_idx)[:b_in]
+        z_ids = jnp.where(z_ids < cfg.n_cap, z_ids, INVALID).astype(jnp.int32)
+
+        # --- remove every z -> p (unbounded, exact) ------------------------
+        st = st._replace(adj=remove_target_everywhere(st, cfg, p))
+
+        # --- reconnect the bounded in-neighbourhood through N_out(p) -------
+        cz = _topc_candidates(st, cfg, z_ids, nout_p, cfg.n_copies)
+
+        def z_body(i, s):
+            def add(sz):
+                def inner(j, s2):
+                    return append_one(s2, cfg, z_ids[i], cz[i, j])
+
+                return lax.fori_loop(0, cfg.n_copies, inner, sz)
+
+            return lax.cond(z_ids[i] >= 0, add, lambda sz: sz, s)
+
+        st = lax.fori_loop(0, z_ids.shape[0], z_body, st)
+
+        # --- release the slot directly (no quarantine, no pending debt) ----
+        new_start = _next_start(st, cfg, p, nout_p)
+        st = st._replace(
+            adj=st.adj.at[sp].set(jnp.full((cfg.r,), INVALID, jnp.int32)),
+            active=st.active.at[sp].set(False),
+            free_stack=st.free_stack.at[st.free_top].set(
+                sp.astype(jnp.int32)
+            ),
+            free_top=st.free_top + 1,
+            n_active=st.n_active - 1,
+            start=new_start,
+        )
+        comps = jnp.sum(z_ids >= 0) * jnp.sum(nout_p >= 0)
+        return st, DeleteStats(
+            jnp.bool_(True), comps.astype(jnp.int32), n_in
+        )
+
+    return lax.cond(valid, do_delete, no_op, state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def local_delete_many(state: GraphState, cfg: ANNConfig, ps: jax.Array):
+    """Serial scan of ``local_delete`` — like the lazy baseline, the serial
+    scan IS the batched formulation: each lane's in-neighbour compare must
+    see the previous lane's repairs to stay exact, so relaxed visibility
+    would reintroduce the dangling edges the policy exists to prevent."""
+
+    def step(st, p):
+        st, stats = local_delete(st, cfg, p)
         return st, stats
 
     return lax.scan(step, state, ps)

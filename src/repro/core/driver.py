@@ -61,8 +61,15 @@ def run_runbook(
     segmented: bool = False,
     segment_t: int = 32,
     verbose: bool = False,
+    baseline: Optional[str] = None,
 ) -> RunbookReport:
     """Replay ``rb`` against ``index``.
+
+    ``baseline="hnsw"`` accepts an ``HNSWIndex`` (core/hnsw.py) instead of
+    a ``StreamingIndex``: the §4 comparison system replays the exact same
+    update stream and eval cadence, so its report rows are comparable
+    point for point with the policies'.  The baseline is host-orchestrated
+    per op — ``segmented`` replay is refused.
 
     ``segmented=True`` routes the update stream through the whole-segment
     compiled path: all runbook steps up to the next eval point become ONE
@@ -82,6 +89,21 @@ def run_runbook(
     segment equivalent yet, and running relaxed visibility from step 0
     would collapse the early graph.
     """
+    if baseline is not None:
+        if baseline != "hnsw":
+            raise ValueError(f"unknown baseline {baseline!r}")
+        from .hnsw import HNSWIndex
+
+        if not isinstance(index, HNSWIndex):
+            raise TypeError(
+                "baseline='hnsw' expects an HNSWIndex, got "
+                f"{type(index).__name__}"
+            )
+        if segmented:
+            raise ValueError(
+                "the hnsw baseline is host-orchestrated per op: segmented "
+                "replay is not supported"
+            )
     if segmented and index.batch_updates:
         raise ValueError(
             "segmented replay requires batch_updates=False: the batched "

@@ -1,6 +1,7 @@
 """Edge mutation helpers shared by insert / delete (Algorithms 2 and 5)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -51,6 +52,21 @@ def append_one(state: GraphState, cfg: ANNConfig, v, u) -> GraphState:
         return lax.cond(cnt < cfg.r, do_append, do_prune, st)
 
     return lax.cond(skip, no_op, mutate, state)
+
+
+def remove_target_everywhere(state: GraphState, cfg: ANNConfig, target):
+    """Remove every edge ``* -> target`` from the whole adjacency matrix.
+
+    One (n_cap, r) compare over the topology — the exact in-neighbourhood,
+    where Algorithm 5 settles for the in-neighbours its greedy search
+    happens to visit.  Rows that lose an entry are re-compacted (the
+    front-compaction contract ``append_one`` writes against); untouched
+    rows come back bit-identical.  Returns new adj.
+    """
+    hit = (state.adj == target) & (target >= 0)
+    cleaned = jnp.where(hit, INVALID, state.adj)
+    compacted = jax.vmap(compact_row)(cleaned)
+    return jnp.where(jnp.any(hit, axis=1)[:, None], compacted, cleaned)
 
 
 def remove_target_rows(state: GraphState, cfg: ANNConfig, row_ids, target):

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from .index import EvalCounters, OpCounters
 from .prune import robust_prune
 from .search import greedy_search, search_batch
 from .types import INVALID, ANNConfig, GraphState, clip_ids
@@ -218,7 +219,17 @@ def _repair_replaced(st: HNSWState, cfg: HNSWConfig, p) -> HNSWState:
 
 
 class HNSWIndex:
-    """Host-orchestrated HNSW with external ids, mirroring StreamingIndex."""
+    """Host-orchestrated HNSW with external ids, mirroring StreamingIndex.
+
+    Duck-type compatible with ``run_runbook``'s index surface (``mode``,
+    ``batch_updates``, ``counters``, ``eval_counters``, insert / delete /
+    recall / ``n_active``) so the §4 baseline replays the same runbooks
+    through the same harness as the update policies.  The pre-counters
+    float attributes (``insert_s`` etc.) survive as read-only properties.
+    """
+
+    mode = "hnsw"
+    batch_updates = False
 
     def __init__(self, cfg: HNSWConfig, max_external_id: Optional[int] = None,
                  seed: int = 0):
@@ -229,12 +240,30 @@ class HNSWIndex:
         self._ext2slot = np.full((n_ext,), INVALID, np.int64)
         self._slot2ext = np.full((cfg.n_cap,), INVALID, np.int64)
         self._replace_queue: list = []
-        self.insert_s = 0.0
-        self.search_s = 0.0
-        self.search_comps = 0
-        self.n_inserts = 0
-        self.n_queries = 0
+        self.counters = OpCounters()
+        self.eval_counters = EvalCounters()
         self._ml = 1.0 / np.log(cfg.m)
+
+    # pre-counters accounting surface, kept for existing callers
+    @property
+    def insert_s(self) -> float:
+        return self.counters.insert_s
+
+    @property
+    def search_s(self) -> float:
+        return self.counters.search_s
+
+    @property
+    def search_comps(self) -> int:
+        return self.counters.search_comps
+
+    @property
+    def n_inserts(self) -> int:
+        return self.counters.n_inserts
+
+    @property
+    def n_queries(self) -> int:
+        return self.counters.n_queries
 
     def _sample_level(self) -> int:
         return min(int(-np.log(self.rng.uniform(1e-12, 1.0)) * self._ml),
@@ -270,8 +299,8 @@ class HNSWIndex:
             self._ext2slot[int(ext)] = slot
             self._slot2ext[slot] = int(ext)
         jax.block_until_ready(self.state.adj0)
-        self.insert_s += time.perf_counter() - t0
-        self.n_inserts += len(np.asarray(ext_ids))
+        self.counters.insert_s += time.perf_counter() - t0
+        self.counters.n_inserts += len(np.asarray(ext_ids))
 
     def delete(self, ext_ids) -> None:
         # mark-deleted; cost is charged to insertion via replacement (§4)
@@ -286,7 +315,9 @@ class HNSWIndex:
         )
         self._ext2slot[np.asarray(ext_ids)] = INVALID
         self._slot2ext[slots] = INVALID
-        self.insert_s += time.perf_counter() - t0
+        # mark-delete cost is charged to insertion via replacement (§4)
+        self.counters.insert_s += time.perf_counter() - t0
+        self.counters.n_deletes += len(slots)
 
     def search(self, queries, k: int = 10, ef: Optional[int] = None):
         t0 = time.perf_counter()
@@ -318,16 +349,28 @@ class HNSWIndex:
         else:
             res = search_batch(view0, lcfg0, x, k=k, l=ef)
         ids = np.asarray(res.topk_ids)
-        self.search_comps += int(np.asarray(res.n_comps).sum())
-        self.search_s += time.perf_counter() - t0
-        self.n_queries += x.shape[0]
+        self.counters.search_comps += int(np.asarray(res.n_comps).sum())
+        self.counters.search_s += time.perf_counter() - t0
+        self.counters.n_queries += x.shape[0]
         ext = np.where(ids >= 0, self._slot2ext[np.clip(ids, 0, None)], INVALID)
         return ext, np.asarray(res.topk_dists), ids
 
     def recall(self, queries, k: int = 10) -> float:
+        """Evaluation sweep: books into ``eval_counters`` (moving the
+        serving counters back afterwards), matching StreamingIndex."""
         from .recall import brute_force_topk, recall_at_k
 
+        t0 = time.perf_counter()
+        c0_comps = self.counters.search_comps
+        c0_s = self.counters.search_s
+        c0_q = self.counters.n_queries
         _, _, slot_ids = self.search(queries, k=k)
+        self.eval_counters.search_comps += self.counters.search_comps - c0_comps
+        self.eval_counters.n_queries += self.counters.n_queries - c0_q
+        self.counters.search_comps = c0_comps
+        self.counters.search_s = c0_s
+        self.counters.n_queries = c0_q
+        self.eval_counters.search_s += time.perf_counter() - t0
         view0 = _level_view(self.state, self.cfg, 0)
         lcfg0 = self.cfg.level_cfg(0)
         true_ids, _ = brute_force_topk(

@@ -71,14 +71,29 @@ class ANNConfig:
     # ids are returned.  Changes the GraphState pytree structure (a
     # ``quant`` leaf appears), so it is checkpoint-critical.
     quantized: bool = False
+    # "local" update policy (topology-aware localized repair, arXiv
+    # 2503.00402): static bound on the number of exact in-neighbours that
+    # receive replacement edges per delete.  Every in-edge is still
+    # removed (the removal is a full-topology compare, not bounded), so
+    # the bound trades graph quality, never correctness.  0 = auto (2r —
+    # the mean in-degree of a degree-R graph is <= R, so 2r covers the
+    # bulk of the in-degree distribution).
+    local_in_cap: int = 0
 
     def max_visits(self, l: int) -> int:
         return l + self.max_visit_slack
+
+    def resolved_local_in_cap(self) -> int:
+        """The static in-neighbour repair bound of the "local" policy
+        (``core/delete.py::local_delete``): ``local_in_cap``, or 2r when 0
+        (auto)."""
+        return self.local_in_cap if self.local_in_cap > 0 else 2 * self.r
 
     def __post_init__(self):
         assert self.metric in ("l2", "ip"), self.metric
         assert self.r >= 1 and self.n_cap >= 1 and self.dim >= 1
         assert self.hop_fused >= -1, self.hop_fused
+        assert self.local_in_cap >= 0, self.local_in_cap
         if self.backend != "auto":
             # validate against the live registry so custom engines added via
             # register_backend are selectable (import deferred: backend.py

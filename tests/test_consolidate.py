@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 
+from invariants import assert_graph_invariants
 from repro.core import (
     ANNConfig,
     StreamingIndex,
@@ -27,9 +28,13 @@ def test_light_consolidate_removes_dangling():
     idx.delete(np.arange(0, 60))
     quar = np.asarray(idx.state.quarantine)
     assert quar.sum() == 60  # all awaiting Alg 6
+    assert_graph_invariants(idx.state, CFG, policy="ip",
+                            context="ip pre-sweep")
     adj = np.asarray(idx.state.adj)
     dangling_before = quar[adj[adj >= 0]].sum()
     idx.state = light_consolidate(idx.state, CFG)
+    assert_graph_invariants(idx.state, CFG, policy="ip", consolidated=True,
+                            context="ip post-sweep")
     adj = np.asarray(idx.state.adj)
     quar = np.asarray(idx.state.quarantine)
     assert quar.sum() == 0
@@ -68,8 +73,12 @@ def test_slot_reuse_after_consolidation_is_safe():
 def test_fresh_consolidate_restores_recall():
     idx, data, queries = _build(mode="fresh")
     idx.delete(np.arange(0, 60))
+    assert_graph_invariants(idx.istate, CFG, policy="fresh",
+                            context="fresh pre-Alg4")
     # force Alg 4
     idx.maybe_consolidate(force=True)
+    assert_graph_invariants(idx.istate, CFG, policy="fresh",
+                            consolidated=True, context="fresh post-Alg4")
     assert not np.asarray(idx.state.tombstone).any()
     r = idx.recall(queries, k=10)
     assert r >= 0.9, r

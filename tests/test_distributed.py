@@ -147,7 +147,8 @@ PARITY_SCRIPT = textwrap.dedent("""
     # (1) bit-identical final graphs, compact vs replicate, BOTH policies
     # (and both visibility modes for ip: the batched phases price masked
     # lanes completely differently, so their parity is a separate claim)
-    for policy, seq in (("ip", True), ("ip", False), ("fresh", True)):
+    for policy, seq in (("ip", True), ("ip", False), ("fresh", True),
+                        ("local", True)):
         a = run("compact", policy, seq)
         b = run("replicate", policy, seq)
         for x, y in zip(jax.tree.leaves(a.states), jax.tree.leaves(b.states)):

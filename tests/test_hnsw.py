@@ -1,8 +1,9 @@
-"""HNSW baseline: build recall, delete-replace path."""
+"""HNSW baseline: build recall, delete-replace path, runbook harness."""
 import numpy as np
+import pytest
 
 from repro.core.hnsw import HNSWConfig, HNSWIndex
-from repro.core import make_dataset
+from repro.core import StreamingIndex, ANNConfig, make_dataset, make_runbook, run_runbook
 
 
 def test_hnsw_build_and_recall():
@@ -29,3 +30,35 @@ def test_hnsw_delete_and_replace():
     assert int(np.asarray(idx.state.tombstone).sum()) < 80
     r = idx.recall(queries, k=10)
     assert r >= 0.85, r
+
+
+def test_hnsw_update_stream_via_runbook_driver():
+    """The baseline rides run_runbook unchanged: same stream, same eval
+    cadence, counters/eval_counters booked like a StreamingIndex."""
+    rb = make_runbook("sliding_window", n=240, dim=16, t_max=12, seed=5)
+    cfg = HNSWConfig(dim=16, n_cap=320, m=8, ef_construction=32,
+                     ef_search=48, max_level=2)
+    idx = HNSWIndex(cfg, max_external_id=300)
+    rep = run_runbook(idx, rb, k=10, eval_every=3, baseline="hnsw")
+    assert rep.mode == "hnsw"
+    assert len(rep.steps) >= 2
+    assert rep.avg_recall >= 0.75, rep.avg_recall
+    # serving vs eval accounting stayed separate
+    assert idx.counters.n_queries == 0
+    assert idx.eval_counters.n_queries > 0
+    assert idx.counters.n_inserts > 0 and idx.counters.n_deletes > 0
+
+
+def test_hnsw_baseline_flag_validation():
+    rb = make_runbook("sliding_window", n=60, dim=8, t_max=4, seed=6)
+    hidx = HNSWIndex(HNSWConfig(dim=8, n_cap=100, m=4, ef_construction=16,
+                                ef_search=16, max_level=1),
+                     max_external_id=100)
+    with pytest.raises(ValueError):
+        run_runbook(hidx, rb, baseline="hnsw", segmented=True)
+    with pytest.raises(ValueError):
+        run_runbook(hidx, rb, baseline="nope")
+    sidx = StreamingIndex(ANNConfig(dim=8, n_cap=128, r=8, l_build=16,
+                                    l_search=16), mode="local")
+    with pytest.raises(TypeError):
+        run_runbook(sidx, rb, baseline="hnsw")

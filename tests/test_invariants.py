@@ -1,0 +1,219 @@
+"""Property tests for the shared graph-invariant oracle itself.
+
+Two halves: (1) healthy states produced by every registered policy pass
+the checker at each lifecycle stage (build, delete-heavy, post-
+consolidation, post-reinsert); (2) each invariant the checker claims to
+enforce is deliberately violated on a healthy state and must be caught.
+A checker that can't flag a planted bug proves nothing when wired into
+the policy/consolidate/quant suites.
+"""
+import numpy as np
+import pytest
+
+from invariants import assert_graph_invariants, check_graph_invariants
+from repro.core import (
+    INVALID,
+    ANNConfig,
+    StreamingIndex,
+    available_policies,
+)
+
+POLICIES = ("ip", "fresh", "local")
+
+
+def _build(mode: str, *, n: int = 150, quantized: bool = False):
+    cfg = ANNConfig(
+        dim=16, n_cap=256, r=8, l_build=24, l_search=24, l_delete=24,
+        k_delete=12, alpha=1.2, quantized=quantized,
+    )
+    rng = np.random.default_rng(11)
+    X = rng.standard_normal((n, cfg.dim)).astype(np.float32)
+    idx = StreamingIndex(cfg, mode=mode)
+    idx.insert(np.arange(n), X)
+    return idx, X
+
+
+def test_registry_covers_all_policies():
+    assert set(POLICIES) <= set(available_policies())
+
+
+@pytest.mark.parametrize("mode", POLICIES)
+def test_healthy_lifecycle_passes(mode):
+    idx, X = _build(mode)
+    assert_graph_invariants(idx.istate, idx.cfg, policy=mode,
+                            context=f"{mode}: post-build")
+    idx.delete(np.arange(0, 60))
+    assert_graph_invariants(idx.istate, idx.cfg, policy=mode,
+                            context=f"{mode}: post-delete")
+    idx.maybe_consolidate(force=True)
+    assert_graph_invariants(idx.istate, idx.cfg, policy=mode,
+                            consolidated=True,
+                            context=f"{mode}: post-consolidate")
+    idx.insert(np.arange(300, 330), X[:30])
+    assert_graph_invariants(idx.istate, idx.cfg, policy=mode,
+                            context=f"{mode}: post-reinsert")
+
+
+def test_local_leaves_no_limbo():
+    """local releases slots directly: no tombstones, no quarantine, and the
+    strict policy="local" target check must hold right after deletes."""
+    idx, _ = _build("local")
+    idx.delete(np.arange(0, 60))
+    g = idx.istate.graph
+    assert int(g.n_pending) == 0
+    assert not bool(np.asarray(g.tombstone).any())
+    assert not bool(np.asarray(g.quarantine).any())
+    assert_graph_invariants(idx.istate, idx.cfg, policy="local")
+
+
+# ---------------------------------------------------------------------------
+# planted-bug half: every violation class must be caught
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def healthy():
+    idx, _ = _build("local")
+    idx.delete(np.arange(0, 40))
+    return idx
+
+
+def _broken(healthy, **graph_overrides):
+    st = healthy.istate
+    return st._replace(graph=st.graph._replace(**graph_overrides))
+
+
+def _first_live(g):
+    return int(np.flatnonzero(np.asarray(g.active))[0])
+
+
+def _first_free(g):
+    return int(np.asarray(g.free_stack)[0])
+
+
+def _expect(errs, needle):
+    assert any(needle in e for e in errs), (
+        f"expected a violation mentioning {needle!r}, got: {errs}"
+    )
+
+
+def test_catches_self_loop(healthy):
+    g = healthy.istate.graph
+    v = _first_live(g)
+    adj = np.asarray(g.adj).copy()
+    adj[v, 0] = v
+    errs = check_graph_invariants(
+        _broken(healthy, adj=adj), healthy.cfg, policy="local")
+    _expect(errs, "self loop")
+
+
+def test_catches_duplicate_edge(healthy):
+    g = healthy.istate.graph
+    v = _first_live(g)
+    adj = np.asarray(g.adj).copy()
+    assert adj[v, 1] != INVALID
+    adj[v, 1] = adj[v, 0]
+    errs = check_graph_invariants(
+        _broken(healthy, adj=adj), healthy.cfg, policy="local")
+    _expect(errs, "duplicate out-edge")
+
+
+def test_catches_hole_in_row(healthy):
+    g = healthy.istate.graph
+    v = _first_live(g)
+    adj = np.asarray(g.adj).copy()
+    assert adj[v, 1] != INVALID
+    adj[v, 0] = INVALID
+    errs = check_graph_invariants(
+        _broken(healthy, adj=adj), healthy.cfg, policy="local")
+    _expect(errs, "front-compacted")
+
+
+def test_catches_edge_into_free_slot(healthy):
+    g = healthy.istate.graph
+    v, dead = _first_live(g), _first_free(g)
+    adj = np.asarray(g.adj).copy()
+    adj[v, 0] = dead
+    errs = check_graph_invariants(
+        _broken(healthy, adj=adj), healthy.cfg, policy="local")
+    _expect(errs, "free slot")
+
+
+def test_catches_edge_into_tombstone_for_local(healthy):
+    g = healthy.istate.graph
+    v = _first_live(g)
+    other = int(np.flatnonzero(np.asarray(g.active))[1])
+    tomb = np.asarray(g.tombstone).copy()
+    active = np.asarray(g.active).copy()
+    tomb[other] = True
+    active[other] = False
+    broken = _broken(
+        healthy, tombstone=tomb, active=active,
+        n_active=g.n_active - 1, n_pending=g.n_pending + 1,
+    )
+    # a fresh-policy state tolerates the limbo target; local must not
+    if int(np.asarray(g.adj)[v, 0]) != other:
+        adj = np.asarray(g.adj).copy()
+        adj[v, 0] = other
+        broken = broken._replace(graph=broken.graph._replace(adj=adj))
+    errs = check_graph_invariants(broken, healthy.cfg, policy="local")
+    _expect(errs, "tombstoned")
+    errs_fresh = check_graph_invariants(broken, healthy.cfg, policy="fresh")
+    assert not any("tombstoned" in e for e in errs_fresh)
+
+
+def test_catches_free_stack_live_overlap(healthy):
+    g = healthy.istate.graph
+    v = _first_live(g)
+    stack = np.asarray(g.free_stack).copy()
+    stack[0] = v
+    errs = check_graph_invariants(
+        _broken(healthy, free_stack=stack), healthy.cfg, policy="local")
+    _expect(errs, "live slot")
+
+
+def test_catches_duplicate_free_stack(healthy):
+    g = healthy.istate.graph
+    stack = np.asarray(g.free_stack).copy()
+    assert int(g.free_top) >= 2
+    stack[1] = stack[0]
+    errs = check_graph_invariants(
+        _broken(healthy, free_stack=stack), healthy.cfg, policy="local")
+    _expect(errs, "duplicate free_stack")
+
+
+def test_catches_counter_drift(healthy):
+    g = healthy.istate.graph
+    errs = check_graph_invariants(
+        _broken(healthy, n_active=g.n_active + 1), healthy.cfg,
+        policy="local")
+    _expect(errs, "n_active")
+
+
+def test_catches_leaked_slot(healthy):
+    g = healthy.istate.graph
+    errs = check_graph_invariants(
+        _broken(healthy, free_top=g.free_top - 1), healthy.cfg,
+        policy="local")
+    _expect(errs, "n_cap")
+
+
+def test_catches_dead_start(healthy):
+    g = healthy.istate.graph
+    dead = _first_free(g)
+    errs = check_graph_invariants(
+        _broken(healthy, start=np.int32(dead)), healthy.cfg, policy="local")
+    _expect(errs, "start")
+
+
+def test_catches_broken_id_map(healthy):
+    st = healthy.istate
+    ext2slot = np.asarray(st.ext2slot).copy()
+    mapped = np.flatnonzero(ext2slot != INVALID)
+    g = st.graph
+    # point one ext id at a different live slot than slot2ext records
+    a, b = mapped[0], mapped[1]
+    ext2slot[a] = ext2slot[b]
+    errs = check_graph_invariants(
+        st._replace(ext2slot=ext2slot), healthy.cfg, policy="local")
+    _expect(errs, "not inverse")

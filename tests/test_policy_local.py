@@ -1,0 +1,242 @@
+"""The ``local`` update policy: topology-aware localized repair.
+
+On delete, ``local`` computes the EXACT in-neighbourhood from the dense
+topology (one (n_cap, r) compare), removes every dangling in-edge, and
+reconnects a bounded prefix of in-neighbours through the deleted vertex's
+out-neighbourhood — then releases the slot straight to the free stack.  No
+tombstones, no quarantine, no consolidation debt.
+
+Pinned here:
+
+  * backend parity: identical graphs (exact adjacency equality) whether
+    repair distances run on the jnp, pallas, or ref backend, for both
+    metrics — the repair path is deterministic tensor math, not a
+    heuristic that may drift per backend;
+  * segment-vs-per-op bit parity via the shared ``_apply_impl`` body;
+  * delete -> reinsert reuses the freed slot LIFO and keeps the id maps
+    inverse;
+  * composition with the quantized tier and with online capacity growth;
+  * the shared invariant oracle holds after every mutation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from invariants import assert_graph_invariants
+from repro.core import (
+    INVALID,
+    ANNConfig,
+    StreamingIndex,
+    apply,
+    available_backends,
+    clone_state,
+    delete_batch,
+    get_policy,
+    init_index_state,
+    insert_batch,
+    make_dataset,
+    plan_segments,
+    run_segments,
+)
+
+BACKENDS = ("jnp", "pallas", "ref")
+
+
+def _cfg(metric="l2", backend="auto", quantized=False, n_cap=192):
+    return ANNConfig(
+        dim=20, n_cap=n_cap, r=8, l_build=20, l_search=20, l_delete=20,
+        k_delete=10, n_copies=2, alpha=1.2, metric=metric, backend=backend,
+        quantized=quantized,
+    )
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _stream_state(cfg, data, *, n0=80, dels=(0, 30), max_ext=1000):
+    """Bootstrap n0 points, then run a delete-heavy stream under local."""
+    st = init_index_state(cfg, max_ext)
+    st, res = apply(st, cfg, insert_batch(np.arange(n0), data[:n0]),
+                    policy="local", sequential=True)
+    assert np.asarray(res.ok)[:n0].all()
+    st, res = apply(st, cfg, delete_batch(np.arange(*dels), cfg.dim),
+                    policy="local", sequential=True)
+    assert np.asarray(res.ok)[: dels[1] - dels[0]].all()
+    return st
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_backend_parity_repair(metric):
+    """Same stream, three backends: bit-identical adjacency and state."""
+    assert set(BACKENDS) <= set(available_backends())
+    data, _ = make_dataset(120, 20, metric, n_queries=4, seed=31)
+    states = {}
+    for name in BACKENDS:
+        cfg = _cfg(metric=metric, backend=name)
+        states[name] = _stream_state(cfg, data)
+        assert_graph_invariants(states[name], cfg, policy="local",
+                                context=f"backend={name}")
+    ref = states["ref"]
+    for name in ("jnp", "pallas"):
+        np.testing.assert_array_equal(
+            np.asarray(states[name].graph.adj), np.asarray(ref.graph.adj),
+            err_msg=f"{name} adjacency diverged from ref ({metric})",
+        )
+        _tree_equal(states[name], ref)
+
+
+@pytest.mark.parametrize("sequential", [True, False])
+def test_segment_matches_per_op_loop(sequential):
+    """apply_segment's scan body IS _apply_impl — replay must be
+    bit-stable for local exactly as for ip/fresh."""
+    cfg = _cfg()
+    data, _ = make_dataset(120, cfg.dim, n_queries=4, seed=32)
+    pol = get_policy("local")
+    assert pol.device_consolidation
+
+    st = init_index_state(cfg, 1000)
+    st, _ = apply(st, cfg, insert_batch(np.arange(60), data[:60]),
+                  policy="local", sequential=True)
+    steps = [
+        delete_batch(np.arange(0, 10), cfg.dim),
+        insert_batch(np.arange(60, 70), data[60:70]),
+        delete_batch(np.arange(10, 20), cfg.dim),
+        delete_batch(np.arange(20, 30), cfg.dim),
+    ]
+
+    ref = clone_state(st)
+    ref_results = []
+    for step in steps:
+        ref, res = apply(ref, cfg, step, policy="local",
+                         sequential=sequential)
+        ref_results.append(res)
+
+    plan = plan_segments(steps, max_t=8)
+    seg_st, seg_results = run_segments(st, cfg, plan, policy="local",
+                                       sequential=sequential)
+    _tree_equal(ref, seg_st)
+    res = seg_results[0]
+    for t, r in enumerate(ref_results):
+        np.testing.assert_array_equal(np.asarray(res.slot)[t],
+                                      np.asarray(r.slot))
+        np.testing.assert_array_equal(np.asarray(res.ok)[t],
+                                      np.asarray(r.ok))
+    # local never owes consolidation: the device trigger must stay silent
+    assert not np.asarray(res.consolidated).any()
+    assert not np.asarray(res.needs_consolidation).any()
+    assert_graph_invariants(seg_st, cfg, policy="local",
+                            context="post-segment")
+
+
+def test_delete_reinsert_slot_reuse():
+    """A local delete pushes the slot onto the free stack; the next insert
+    pops it (LIFO) and the id maps stay mutually inverse."""
+    cfg = _cfg()
+    data, _ = make_dataset(90, cfg.dim, n_queries=4, seed=33)
+    idx = StreamingIndex(cfg, mode="local")
+    idx.insert(np.arange(80), data[:80])
+
+    victim_slot = int(np.asarray(idx.istate.ext2slot)[17])
+    assert victim_slot != INVALID
+    free_top_before = int(idx.istate.graph.free_top)
+
+    idx.delete(np.array([17]))
+    g = idx.istate.graph
+    assert int(g.free_top) == free_top_before + 1
+    assert int(np.asarray(g.free_stack)[free_top_before]) == victim_slot
+    assert int(g.n_pending) == 0
+    assert int(np.asarray(idx.istate.ext2slot)[17]) == INVALID
+    assert_graph_invariants(idx.istate, cfg, policy="local",
+                            context="post-delete")
+
+    idx.insert(np.array([555]), data[88:89])
+    st = idx.istate
+    assert int(np.asarray(st.ext2slot)[555]) == victim_slot
+    assert int(np.asarray(st.slot2ext)[victim_slot]) == 555
+    assert int(st.graph.free_top) == free_top_before
+    assert_graph_invariants(st, cfg, policy="local",
+                            context="post-reinsert")
+
+
+def test_local_with_quantized_tier():
+    """local deletes compose with the int8 tier: quant rows track the
+    vector store and search still answers after heavy deletions."""
+    cfg = _cfg(quantized=True)
+    data, queries = make_dataset(120, cfg.dim, "l2", n_queries=16, seed=34)
+    idx = StreamingIndex(cfg, mode="local")
+    idx.insert(np.arange(100), data[:100])
+    idx.delete(np.arange(0, 40))
+    assert_graph_invariants(idx.istate, cfg, policy="local",
+                            context="quantized post-delete")
+    assert idx.n_active == 60
+    rec = idx.recall(queries, k=10)
+    assert rec >= 0.80, f"quantized local recall {rec}"
+
+
+def test_local_across_capacity_growth():
+    """Deletes before and after a grow_index crossing: the free-stack
+    determinism contract (fresh slots above surviving entries) holds, and
+    the invariants pass in the bigger bucket."""
+    cfg = _cfg(n_cap=128)
+    data, queries = make_dataset(300, cfg.dim, "l2", n_queries=16, seed=35)
+    idx = StreamingIndex(cfg, mode="local", auto_grow=True)
+    idx.insert(np.arange(100), data[:100])
+    idx.delete(np.arange(0, 20))
+    n_cap_before = idx.cfg.n_cap
+    # push past the high-water mark -> at least one bucket growth
+    idx.insert(np.arange(100, 260), data[100:260])
+    assert idx.cfg.n_cap > n_cap_before, "expected a capacity crossing"
+    assert_graph_invariants(idx.istate, idx.cfg, policy="local",
+                            context="post-grow")
+    idx.delete(np.arange(20, 60))
+    assert_graph_invariants(idx.istate, idx.cfg, policy="local",
+                            context="post-grow post-delete")
+    assert idx.n_active == 200
+    rec = idx.recall(queries, k=10)
+    assert rec >= 0.80, f"post-growth local recall {rec}"
+
+
+def test_local_runbook_invariants_every_window():
+    """Replay a delete-heavy runbook step by step under local and hold the
+    structural oracle after EVERY window — the acceptance contract for the
+    policy, not just spot checks."""
+    from repro.core import make_runbook
+
+    rb = make_runbook("sliding_window", n=360, dim=16, t_max=12, seed=37)
+    cfg = ANNConfig(dim=16, n_cap=520, r=8, l_build=20, l_search=20,
+                    l_delete=20, k_delete=10, alpha=1.2)
+    idx = StreamingIndex(cfg, mode="local", max_external_id=400)
+    for t, step in enumerate(rb.steps):
+        if len(step.insert_ids):
+            idx.insert(step.insert_ids, rb.data[step.insert_ids])
+        if len(step.delete_ids):
+            idx.delete(step.delete_ids)
+        assert_graph_invariants(idx.istate, cfg, policy="local",
+                                context=f"window {t}")
+    assert int(idx.istate.graph.n_pending) == 0
+
+
+def test_local_in_cap_bounds_repair():
+    """The static in-neighbour cap is honoured: a tiny cap still yields a
+    valid graph (no dangling edges) — only repair quality shrinks."""
+    data, _ = make_dataset(100, 20, "l2", n_queries=4, seed=36)
+    for cap in (1, 4):
+        cfg = dataclasses.replace(_cfg(), local_in_cap=cap)
+        st = _stream_state(cfg, data, n0=80, dels=(0, 25))
+        assert_graph_invariants(st, cfg, policy="local",
+                                context=f"local_in_cap={cap}")
+        # removal is unbounded regardless of the cap: no edges into the
+        # deleted ids can survive
+        adj = np.asarray(st.graph.adj)
+        dead_slots = np.asarray(st.graph.free_stack)[
+            : int(st.graph.free_top)]
+        live_rows = adj[np.asarray(st.graph.active)]
+        assert not np.isin(live_rows[live_rows != INVALID],
+                           dead_slots).any()

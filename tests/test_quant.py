@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from invariants import assert_graph_invariants
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import (
     ANNConfig,
@@ -288,6 +289,9 @@ def test_stream_grows_through_buckets(quantized):
         caps.add(idx.cfg.n_cap)
     assert len(caps) >= 3, caps  # 64 -> ... crossed >= 2 bucket boundaries
     assert idx.n_active == 400
+    # full structural oracle (adjacency, free stack, id maps, quant leaf)
+    assert_graph_invariants(idx.istate, idx.cfg, policy="ip",
+                            context="post-growth stream")
     # id-map invariants: every external id maps to a slot that maps back
     e2s = np.asarray(idx.istate.ext2slot)[:400]
     assert (e2s >= 0).all()

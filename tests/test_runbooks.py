@@ -48,6 +48,31 @@ def test_clustered_runbook_ip_vs_fresh():
     ), (reports["ip"].summary(), reports["fresh"].summary())
 
 
+@pytest.mark.slow
+def test_three_policy_mini_runbook_band():
+    """Fixed-seed mini sliding-window: all three policies' per-window
+    recall stays inside one pinned tolerance band — a floor on every
+    evaluated window plus a bounded spread, so a policy whose repair
+    quietly degrades over the stream fails here before the benches see
+    it."""
+    rb = make_runbook("sliding_window", n=900, dim=24, t_max=18, seed=4)
+    floor, spread = 0.78, 0.15
+    windows = {}
+    for mode in ("ip", "fresh", "local"):
+        cfg = _cfg(1100, 24)
+        idx = StreamingIndex(cfg, mode=mode, max_external_id=1000)
+        rep = run_runbook(idx, rb, k=10, eval_every=2)
+        steady = [m.recall for m in rep.steps if m.step >= rb.eval_from]
+        assert steady, rep.summary()
+        assert min(steady) >= floor, (mode, rep.summary())
+        assert max(steady) - min(steady) <= spread, (mode, steady)
+        windows[mode] = steady
+    # same eval cadence -> window-for-window comparable; local's bounded
+    # repair must track the in-place policy within the band everywhere
+    for a, b in zip(windows["local"], windows["ip"]):
+        assert a >= b - spread, (windows["local"], windows["ip"])
+
+
 def test_inner_product_runbook():
     rb = make_runbook("sliding_window", n=1000, dim=32, t_max=16, seed=3,
                       metric="ip")
